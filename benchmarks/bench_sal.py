@@ -1,0 +1,39 @@
+"""Paper Table 5: SAL — uncompressed-SA single gather vs compressed-SA
+LF-mapping walk.  The paper measures 5190 -> 25.8 instructions per offset
+(~183x); our instruction proxy is the LF-walk step count (each step is a
+full occ computation + gather)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import get_world, timeit, row
+from repro.core.sal import sal_compressed, sal_direct
+
+
+def run(n_lookups: int = 200_000):
+    idx, _, _ = get_world()
+    fm = idx.device()
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, idx.N, size=n_lookups)
+                       .astype(np.int32))
+
+    t_direct = timeit(
+        lambda: sal_direct(fm, rows).block_until_ready())
+    t_comp = timeit(
+        lambda: sal_compressed(fm, rows)[0].block_until_ready(), repeat=1)
+    _, steps = sal_compressed(fm, rows)
+    mean_steps = float(np.asarray(steps).mean())
+
+    ns = lambda t: 1e9 * t / n_lookups
+    row("sal.direct.ns_per_lookup", f"{ns(t_direct):.1f}",
+        "Equation 1: one gather")
+    row("sal.compressed.ns_per_lookup", f"{ns(t_comp):.1f}",
+        f"LF walk, mean {mean_steps:.1f} occ-steps/lookup")
+    row("sal.speedup", f"{t_comp / t_direct:.1f}",
+        "paper: 183x (instruction-bound scalar baseline)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Fig 4 analogue: scaling of the batched kernels with lane count.
+
+On one CPU we cannot sweep cores; the TPU-relevant scaling axis is the
+task-batch width (vector lanes): perfect inter-task vectorization gives
+flat time-per-task as width grows, matching Fig 4's near-linear core
+scaling for the kernels."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import get_world, timeit, row
+from repro.core.bsw import BSWParams, bsw_extend_batch
+from repro.core import smem as sm
+from repro.core.smem import MemOptions
+
+
+def run():
+    idx, reads, _ = get_world()
+    p = BSWParams()
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 4, size=400).astype(np.uint8)
+
+    for width in (16, 64, 256, 1024):
+        qs, ts, h0s = [], [], []
+        for i in range(width):
+            ql = int(rng.integers(40, 120))
+            tl = int(rng.integers(50, 150))
+            qs.append(base[i % 100: i % 100 + ql].copy())
+            ts.append(base[i % 100 + 2: i % 100 + 2 + tl].copy())
+            h0s.append(30)
+        t = timeit(lambda: bsw_extend_batch(qs, ts, h0s, p,
+                                            qmax=128, tmax=160), repeat=2)
+        row(f"scale.bsw.width_{width}.us_per_task",
+            f"{1e6 * t / width:.1f}", "flat = perfect lane scaling")
+
+    opt = MemOptions()
+    for width in (8, 32, 128):
+        sub = reads[:width]
+        lens = np.full(width, reads.shape[1], np.int64)
+        t = timeit(lambda: sm.collect_smems_batch(idx, sub, lens, opt),
+                   repeat=1)
+        row(f"scale.smem.width_{width}.us_per_read",
+            f"{1e6 * t / width:.0f}", "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Shared benchmark fixtures: a cached reference index + simulated reads
+(the paper uses Hg38-half + Broad/SRA read sets; offline we synthesize a
+repeat-rich reference, Table 3 analogue)."""
+
+from __future__ import annotations
+
+import pathlib
+import pickle
+import sys
+import time
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import numpy as np  # noqa: E402
+
+from repro.core import fmindex as fmx  # noqa: E402
+from repro.data import make_reference, simulate_reads  # noqa: E402
+
+CACHE = pathlib.Path("/tmp/repro_bench_cache")
+REF_N = 300_000
+N_READS = 512
+READ_LEN = 101
+
+
+def get_world(ref_n: int = REF_N, n_reads: int = N_READS,
+              read_len: int = READ_LEN):
+    CACHE.mkdir(exist_ok=True)
+    key = CACHE / f"world_{ref_n}_{n_reads}_{read_len}.pkl"
+    if key.exists():
+        with open(key, "rb") as f:
+            return pickle.load(f)
+    ref = make_reference(ref_n, seed=42)
+    idx = fmx.build_index(ref)
+    reads, truth = simulate_reads(ref, n_reads, read_len, seed=7)
+    world = (idx, reads, truth)
+    with open(key, "wb") as f:
+        pickle.dump(world, f)
+    return world
+
+
+def timeit(fn, *, repeat: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, value, derived=""):
+    print(f"{name},{value},{derived}", flush=True)

@@ -1,0 +1,65 @@
+"""§Perf hillclimb driver: compile a cell under a named variant and print
+the roofline delta vs baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch dbrx-132b \
+      --shape train_4k --variant moe_ep=1,seq_parallel=1
+
+Each run writes results/hillclimb/<arch>__<shape>__<variant>.json.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+
+from repro.launch.dryrun import lower_cell  # noqa: E402
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "hillclimb"
+
+
+def parse_variant(s: str) -> dict:
+    out = {}
+    if not s:
+        return out
+    for kv in s.split(","):
+        k, _, v = kv.partition("=")
+        v2 = v.strip()
+        if v2 in ("0", "1"):
+            out[k.strip()] = bool(int(v2))
+        elif v2.isdigit():
+            out[k.strip()] = int(v2)
+        else:
+            out[k.strip()] = v2
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    variant = parse_variant(args.variant)
+    tag = args.tag or (args.variant.replace("=", "").replace(",", "+")
+                       or "baseline")
+    rec = lower_cell(args.arch, args.shape, False, variant=variant)
+    rec["variant"] = variant
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{args.arch}__{args.shape}__{tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    r = rec["roofline"]
+    print(f"{args.arch} {args.shape} [{tag}]")
+    print(f"  compute    {r['compute_s']*1e3:10.2f} ms")
+    print(f"  memory     {r['memory_s']*1e3:10.2f} ms")
+    print(f"  collective {r['collective_s']*1e3:10.2f} ms")
+    print(f"  dominant   {r['dominant']}")
+    print(f"  fraction   {r['roofline_fraction']:.4f}")
+    print(f"  peak HBM   {rec['memory']['peak_bytes']/1e9:.1f} GB/chip")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+results/dryrun/*.json records.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRY = ROOT / "results" / "dryrun"
+
+ARCH_ORDER = ["qwen1.5-0.5b", "internlm2-1.8b", "nemotron-4-340b",
+              "qwen1.5-110b", "llama4-scout-17b-a16e", "dbrx-132b",
+              "mamba2-130m", "qwen2-vl-72b", "musicgen-large", "zamba2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str):
+    recs = {}
+    for p in sorted(DRY.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.2f}ms"
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful/HLO flops | roofline frac | HBM peak/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            ro = r["roofline"]
+            peak = r["memory"]["peak_bytes"] or 0
+            lines.append(
+                f"| {a} | {s} | {fmt_s(ro['compute_s'])} | "
+                f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+                f"{ro['dominant']} | {ro['useful_flops_ratio']:.2f} | "
+                f"{ro['roofline_fraction']:.3f} | {peak/1e9:.1f} GB |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | compile | flops/chip | coll. link-bytes/chip | "
+        "collective counts | peak HBM/chip |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            cnts = ",".join(f"{k}:{v}" for k, v in
+                            sorted(r["collectives"]["counts"].items()))
+            peak = r["memory"]["peak_bytes"] or 0
+            lines.append(
+                f"| {a} | {s} | {r['compile_s']:.1f}s | "
+                f"{r['cost']['flops']/1e12:.2f}T | "
+                f"{r['collectives']['link_bytes']/1e9:.2f} GB | {cnts} | "
+                f"{peak/1e9:.1f} GB |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dryrun", action="store_true")
+    args = ap.parse_args()
+    if args.dryrun:
+        print(dryrun_table(args.mesh))
+    else:
+        print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only smem,sal,bsw,e2e,scaling]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling")
+    args = ap.parse_args()
+    picks = set(args.only.split(","))
+    from . import bench_smem, bench_sal, bench_bsw, bench_e2e, \
+        bench_scaling
+    suites = {
+        "smem": ("Table 4 (SMEM kernel)", bench_smem.run),
+        "sal": ("Table 5 (SAL kernel)", bench_sal.run),
+        "bsw": ("Tables 6-8 (BSW kernel)", bench_bsw.run),
+        "e2e": ("Figure 5 (end-to-end)", bench_e2e.run),
+        "scaling": ("Figure 4 (scaling)", bench_scaling.run),
+    }
+    print("name,value,derived")
+    for key, (title, fn) in suites.items():
+        if key not in picks:
+            continue
+        print(f"# --- {title} ---", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Train a reduced-config LM for a few hundred steps with fault-tolerant
+checkpointing (kill and re-run: it resumes).
+
+  PYTHONPATH=src python examples/train_lm.py [arch] [steps]
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import smoke_config
+from repro.launch.train import train
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "internlm2-1.8b"
+steps = int(sys.argv[2]) if len(sys.argv) > 2 else 200
+cfg = smoke_config(arch)
+state, losses = train(cfg, steps=steps, batch=8, seq=128,
+                      ckpt_dir=f"/tmp/repro_train_{arch}", ckpt_every=50)
+print(f"{arch}: loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+      f"{len(losses)} steps")

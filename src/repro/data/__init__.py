@@ -1,0 +1,1 @@
+from .reads import make_reference, simulate_reads, encode, decode  # noqa: F401

@@ -1,0 +1,101 @@
+"""Synthetic genome + short-read simulator (the framework's data pipeline).
+
+BWA-MEM's benchmark datasets (Table 3) are Illumina reads of length 76-151
+drawn from the human genome.  Offline we synthesize:
+
+* a reference with *repeat structure* (segmental duplications), because SMEM
+  interval sizes and chaining behaviour are driven by repeats, not by iid
+  sequence;
+* reads sampled from either strand with SNPs, short indels and occasional
+  ambiguous bases ('N'), mimicking Illumina error/variant profiles.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_BASES = np.frombuffer(b"ACGT", dtype=np.uint8)
+_CODE = np.full(256, 255, dtype=np.uint8)
+for _i, _b in enumerate(b"ACGT"):
+    _CODE[_b] = _i
+_CODE[ord("N")] = 4
+
+
+def encode(s: str | bytes) -> np.ndarray:
+    """ASCII -> codes (0..3, N=4)."""
+    if isinstance(s, str):
+        s = s.encode()
+    return _CODE[np.frombuffer(s, dtype=np.uint8)].copy()
+
+
+def decode(codes: np.ndarray) -> str:
+    out = np.where(codes < 4, _BASES[np.clip(codes, 0, 3)], ord("N"))
+    return out.astype(np.uint8).tobytes().decode()
+
+
+def make_reference(n: int, *, seed: int = 0, repeat_frac: float = 0.3,
+                   repeat_len: int = 200) -> np.ndarray:
+    """Random genome with planted repeats.
+
+    ``repeat_frac`` of the sequence is built by re-pasting earlier segments
+    (with ~1% divergence), giving realistic multi-hit SMEMs.
+    """
+    rng = np.random.default_rng(seed)
+    ref = rng.integers(0, 4, size=n, dtype=np.uint8)
+    n_rep = int(n * repeat_frac / repeat_len)
+    for _ in range(n_rep):
+        if n <= 2 * repeat_len:
+            break
+        src = int(rng.integers(0, n - repeat_len))
+        dst = int(rng.integers(0, n - repeat_len))
+        seg = ref[src:src + repeat_len].copy()
+        mut = rng.random(repeat_len) < 0.01
+        seg[mut] = rng.integers(0, 4, size=int(mut.sum()), dtype=np.uint8)
+        ref[dst:dst + repeat_len] = seg
+    return ref
+
+
+def simulate_reads(ref: np.ndarray, n_reads: int, read_len: int, *,
+                   seed: int = 1, snp_rate: float = 0.01,
+                   indel_rate: float = 0.001, n_rate: float = 0.001,
+                   rev_frac: float = 0.5):
+    """Sample reads from both strands with SNPs / short indels / Ns.
+
+    Returns (reads (n_reads, read_len) uint8, truth dict of arrays).
+    """
+    rng = np.random.default_rng(seed)
+    n = len(ref)
+    assert n > read_len + 8
+    pos = rng.integers(0, n - read_len - 8, size=n_reads)
+    is_rev = rng.random(n_reads) < rev_frac
+    reads = np.empty((n_reads, read_len), dtype=np.uint8)
+    for r in range(n_reads):
+        frag = ref[pos[r]: pos[r] + read_len + 8].copy()
+        # indels: delete or duplicate a base
+        out = []
+        i = 0
+        while len(out) < read_len and i < len(frag):
+            u = rng.random()
+            if u < indel_rate:        # deletion in read
+                i += 1
+                continue
+            if u < 2 * indel_rate:    # insertion in read (random base)
+                out.append(int(rng.integers(0, 4)))
+                continue
+            out.append(int(frag[i]))
+            i += 1
+        while len(out) < read_len:
+            out.append(int(rng.integers(0, 4)))
+        read = np.array(out[:read_len], dtype=np.uint8)
+        # SNPs
+        snp = rng.random(read_len) < snp_rate
+        read[snp] = (read[snp] + rng.integers(1, 4, size=int(snp.sum()))) % 4
+        # ambiguous bases
+        amb = rng.random(read_len) < n_rate
+        read[amb] = 4
+        if is_rev[r]:
+            read = (3 - read)[::-1]
+            read[read > 3] = 4  # keep N as N after complement
+        reads[r] = read
+    truth = {"pos": pos, "is_rev": is_rev}
+    return reads, truth

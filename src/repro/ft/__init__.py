@@ -1,0 +1,3 @@
+from .checkpoint import CheckpointManager  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401
+from .elastic import ElasticPlan, plan_remesh  # noqa: F401

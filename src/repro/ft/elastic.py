@@ -1,0 +1,56 @@
+"""Elastic re-meshing: recover from node loss / grow into new capacity.
+
+Strategy (checkpoint-restart elasticity — the production-standard design
+for TPU pods, where the SPMD program shape is fixed at compile time):
+
+1. the training loop checkpoints (atomically) at the failure signal;
+2. ``plan_remesh`` picks the largest valid mesh for the surviving chips —
+   the `model` axis is preserved (TP degree is a model-quality contract),
+   the `data`/`pod` axes shrink to the largest divisor of the remaining
+   chip count;
+3. the launcher recompiles the step for the new mesh and restores the
+   checkpoint: parameters are resharded automatically on load because the
+   checkpoint stores unsharded logical arrays;
+4. the global batch is either kept (grad-accumulation steps added) or
+   scaled, per policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    pods: int
+    grad_accum: int          # extra accumulation to keep the global batch
+    dropped_chips: int
+
+    @property
+    def n_chips(self):
+        return self.data * self.model * self.pods
+
+
+def plan_remesh(available_chips: int, *, model: int = 16,
+                target_global_batch: int = 256,
+                per_replica_batch: int = 1,
+                keep_global_batch: bool = True) -> ElasticPlan:
+    """Largest (pods x data x model) mesh fitting the surviving chips."""
+    if available_chips < model:
+        raise ValueError(
+            f"cannot keep model axis {model} with {available_chips} chips")
+    groups = available_chips // model            # candidate data*pod extent
+    # prefer full pods of 16 data-rows when possible
+    pods = max(groups // 16, 1) if groups >= 16 else 1
+    data = groups // pods
+    used = pods * data * model
+    replicas = pods * data
+    if keep_global_batch:
+        per_step = replicas * per_replica_batch
+        accum = max(1, -(-target_global_batch // max(per_step, 1)))
+    else:
+        accum = 1
+    return ElasticPlan(data=data, model=model, pods=pods, grad_accum=accum,
+                       dropped_chips=available_chips - used)

@@ -1,0 +1,65 @@
+"""Straggler detection/mitigation for the synchronous training loop.
+
+At 1000+ nodes the slowest worker sets the step time.  The monitor keeps
+a rolling step-time distribution; a step exceeding
+``median x threshold`` is a straggle event.  Mitigations (host-level —
+the data-parallel step itself is a single SPMD program):
+
+* ``"rebalance"``  — shrink the per-host microbatch of the slow host
+  (returned as a suggestion; the data pipeline re-slices on the next step;
+  the paper's 'distribute the reads equally' assumption made dynamic);
+* ``"checkpoint"`` — persistent straggling of the same host is treated as
+  an impending failure: the loop is told to checkpoint now and request an
+  elastic re-mesh (ft/elastic.py) that drops the node.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    host: int
+    step_time: float
+    median: float
+    action: str            # "none" | "rebalance" | "checkpoint"
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 32, threshold: float = 1.8,
+                 persist: int = 3):
+        self.window = window
+        self.threshold = threshold
+        self.persist = persist
+        self.times: collections.deque = collections.deque(maxlen=window)
+        self.strikes: collections.Counter = collections.Counter()
+        self._t0 = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int, host: int = 0) -> StragglerEvent | None:
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        if len(self.times) < max(8, self.window // 4):
+            return None
+        med = statistics.median(self.times)
+        if dt <= med * self.threshold:
+            self.strikes[host] = 0
+            return None
+        self.strikes[host] += 1
+        action = "checkpoint" if self.strikes[host] >= self.persist \
+            else "rebalance"
+        return StragglerEvent(step=step, host=host, step_time=dt,
+                              median=med, action=action)
+
+    def rebalance_fraction(self, host: int) -> float:
+        """Suggested microbatch multiplier for a straggling host."""
+        med = statistics.median(self.times) if self.times else 1.0
+        last = self.times[-1] if self.times else med
+        return max(0.5, min(1.0, med / max(last, 1e-9)))

@@ -1,0 +1,1 @@
+from .ops import bsw_extend_pallas  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: inter-task banded Smith-Waterman (paper §5.3).
+
+TPU mapping of the paper's AVX512 inter-task vectorization:
+
+* the task axis is the VPU **lane** dimension — one grid cell processes a
+  block of LANES=128 sequence pairs (AVX512 gives 64 8-bit lanes; a TPU
+  VREG row gives 128 32-bit lanes);
+* sequences arrive SoA (``(LANES, qmax)`` / ``(LANES, tmax)``) so each DP
+  row touches contiguous VMEM — the paper's AoS->SoA conversion (§5.3.3);
+* both DP rows (H and E) live in VMEM scratch for the whole row loop: the
+  working set per block is LANES x (qmax+1) x 2 x 4B ≈ 0.5 MB at qmax=512,
+  far under the ~16 MB VMEM budget, so BlockSpec keeps everything resident;
+* the scalar in-row F recurrence is replaced by a Hillis-Steele prefix max
+  (max-plus algebra) — log2(qmax) vectorized steps instead of a serial
+  carry, the TPU equivalent of the paper's in-register dependency chain;
+* band adjustment / z-drop / early exit are lane-masked (paper §5.4(d):
+  "mask and cmp instructions maintain correct values for aborted pairs").
+
+The DP math is ``repro.core.bsw.bsw_row_step`` — the *same* traced code as
+the jnp batch reference, so kernel == reference == scalar oracle exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bsw import bsw_init_state, bsw_row_step
+
+LANES = 128
+
+
+def _bsw_kernel_body(qs_ref, ts_ref, qlens_ref, tlens_ref, h0s_ref, ws_ref,
+                     out_ref, *, a, b, o_del, e_del, o_ins, e_ins, zdrop,
+                     qmax, tmax):
+    qs = qs_ref[...]
+    ts = ts_ref[...]
+    qlens = qlens_ref[...]
+    tlens = tlens_ref[...]
+    h0s = h0s_ref[...]
+    ws = ws_ref[...]
+
+    state = bsw_init_state(qlens, h0s, o_ins + e_ins, e_ins, qmax)
+
+    def row(i, st):
+        return bsw_row_step(i, st, qs, ts, qlens, tlens, h0s, ws,
+                            a, b, o_del, e_del, o_ins, e_ins, zdrop, qmax)
+
+    st = jax.lax.fori_loop(0, tmax, row, state)
+    (_, _, _, _, max_, max_i, max_j, max_ie, gscore, max_off, _) = st
+    out_ref[...] = jnp.stack([max_, max_j + 1, max_i + 1,
+                              max_ie + 1, gscore, max_off])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "a", "b", "o_del", "e_del", "o_ins", "e_ins", "zdrop", "qmax", "tmax",
+    "interpret"))
+def bsw_pallas_call(qs, ts, qlens, tlens, h0s, ws, *, a, b, o_del, e_del,
+                    o_ins, e_ins, zdrop, qmax, tmax, interpret=True):
+    """qs (W,qmax) / ts (W,tmax) int32 (pad code 4); W % LANES == 0.
+
+    Returns (6, W) int32: score, qle, tle, gtle, gscore, max_off.
+    """
+    W = qs.shape[0]
+    assert W % LANES == 0, "pad the task batch to a multiple of LANES"
+    grid = (W // LANES,)
+    body = functools.partial(
+        _bsw_kernel_body, a=a, b=b, o_del=o_del, e_del=e_del, o_ins=o_ins,
+        e_ins=e_ins, zdrop=zdrop, qmax=qmax, tmax=tmax)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((LANES, qmax), lambda g: (g, 0)),
+            pl.BlockSpec((LANES, tmax), lambda g: (g, 0)),
+            pl.BlockSpec((LANES,), lambda g: (g,)),
+            pl.BlockSpec((LANES,), lambda g: (g,)),
+            pl.BlockSpec((LANES,), lambda g: (g,)),
+            pl.BlockSpec((LANES,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((6, LANES), lambda g: (0, g)),
+        out_shape=jax.ShapeDtypeStruct((6, W), jnp.int32),
+        interpret=interpret,
+    )(qs, ts, qlens, tlens, h0s, ws)

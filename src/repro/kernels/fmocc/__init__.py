@@ -1,0 +1,1 @@
+from .ops import occ_pallas, backward_ext_pallas  # noqa: F401

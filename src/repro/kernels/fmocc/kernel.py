@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: FM-index occupancy count (paper §4.4).
+
+The paper's optimized O_c layout stores each eta=32 bucket as ONE cache
+line: 4x4B counts + 32 one-byte bases (+pad).  occ(c, i) is then an AVX2
+byte-compare against c followed by a 32-bit popcount of the compare mask.
+
+TPU adaptation: the 32-byte bucket body becomes a 32-lane VREG row; the
+compare+popcount becomes a VPU compare + masked lane-sum.  A block of
+QB=256 queries is processed per grid cell:
+
+  out[q] = counts[q] + sum_j [ bytes[q, j] == c[q]  AND  j < r[q] ]
+
+The *gather* of the (bucket -> (counts, bytes)) rows is left to XLA in
+ops.py — on TPU a data-dependent gather belongs to the XLA gather engine;
+the irregular-latency hiding the paper gets from software prefetching is
+obtained here by batching the gathers of a whole lockstep round into one
+vectorized load (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QB = 256          # queries per grid cell
+ETA = 32          # bucket width (paper's optimized compression factor)
+
+
+def _occ_kernel_body(bytes_ref, c_ref, r_ref, base_ref, out_ref):
+    rows = bytes_ref[...].astype(jnp.int32)          # (QB, 32)
+    c = c_ref[...]                                   # (QB,)
+    r = r_ref[...]                                   # (QB,)
+    base = base_ref[...]                             # (QB,)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (QB, ETA), 1)
+    m = (rows == c[:, None]) & (lane < r[:, None])
+    out_ref[...] = base + jnp.sum(m.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def occ_count_pallas_call(bucket_bytes, c, r, base, *, interpret=True):
+    """bucket_bytes (T,32) uint8, c/r/base (T,) int32 -> occ values (T,).
+
+    T must be a multiple of QB (ops.py pads).
+    """
+    T = bucket_bytes.shape[0]
+    assert T % QB == 0
+    grid = (T // QB,)
+    return pl.pallas_call(
+        _occ_kernel_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QB, ETA), lambda g: (g, 0)),
+            pl.BlockSpec((QB,), lambda g: (g,)),
+            pl.BlockSpec((QB,), lambda g: (g,)),
+            pl.BlockSpec((QB,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((QB,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.int32),
+        interpret=interpret,
+    )(bucket_bytes, c, r, base)

@@ -1,0 +1,63 @@
+"""jit'd wrappers: Pallas-backed occ and full backward extension."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fmindex import FMArrays, I32
+from .kernel import occ_count_pallas_call, QB
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def occ_pallas(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
+               interpret: bool = True) -> jnp.ndarray:
+    """Occ(c, i) over flat query vectors via the Pallas compare+count kernel.
+
+    XLA performs the bucket gather (one vectorized load per lockstep round
+    — the batching-as-prefetch adaptation); Pallas does the byte-compare +
+    popcount over the gathered 32-byte rows.
+    """
+    shape = c.shape
+    cf = c.reshape(-1).astype(I32)
+    i_f = i.reshape(-1).astype(I32)
+    p = i_f + 1
+    b = p >> 5
+    r = p & 31
+    base = fm.occ32_counts[b, cf]
+    rows = fm.occ32_bytes[b]
+    T = cf.shape[0]
+    Tp = -(-T // QB) * QB
+    pad = Tp - T
+    rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    out = occ_count_pallas_call(
+        rows, jnp.pad(cf, (0, pad)), jnp.pad(r, (0, pad)),
+        jnp.pad(base, (0, pad)), interpret=interpret)
+    return out[:T].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def backward_ext_pallas(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
+    """Full bi-interval backward extension with Pallas occ (kernel analogue
+    of core.fmindex.backward_ext_v)."""
+    k = k.astype(I32); l = l.astype(I32); s = s.astype(I32)
+    cc = jnp.clip(c, 0, 3).astype(I32)
+    batch = k.shape
+    c4 = jnp.broadcast_to(jnp.arange(4, dtype=I32), batch + (4,))
+    i1 = jnp.broadcast_to((k - 1)[..., None], batch + (4,))
+    i2 = jnp.broadcast_to((k + s - 1)[..., None], batch + (4,))
+    o1 = occ_pallas(fm, c4, i1, interpret=interpret)
+    o2 = occ_pallas(fm, c4, i2, interpret=interpret)
+    ks = fm.C + o1
+    ss = o2 - o1
+    sent = ((k <= fm.primary) & (fm.primary < k + s)).astype(I32)
+    l3 = l + sent
+    l2 = l3 + ss[..., 3]
+    l1 = l2 + ss[..., 2]
+    l0 = l1 + ss[..., 1]
+    ls = jnp.stack([l0, l1, l2, l3], axis=-1)
+    take = lambda a_: jnp.take_along_axis(a_, cc[..., None], axis=-1)[..., 0]
+    s_out = jnp.where(c > 3, 0, take(ss))
+    return take(ks), take(ls), s_out

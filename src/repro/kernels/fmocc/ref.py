@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fmocc kernel: repro.core.fmindex.occ_opt_v."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fmindex import FMArrays, occ_opt_v
+
+
+def occ_ref(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+    return occ_opt_v(fm, c, i)

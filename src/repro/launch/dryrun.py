@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede any jax-touching import (jax locks
+# the device count at first backend init; the dry-run needs 512 placeholder
+# host devices to build the production meshes) — hence no module docstring
+# above them and no `from __future__` import in this file.
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For every cell this driver:
+#   1. builds ShapeDtypeStruct stand-ins for params / optimizer / caches /
+#      batch (zero allocation),
+#   2. jits the step with explicit in/out shardings from dist/sharding.py,
+#   3. .lower().compile() -- a sharding mismatch, OOM-at-compile or
+#      unsupported collective is a FAILURE of the framework,
+#   4. records memory_analysis(), cost_analysis() and the parsed collective
+#      schedule to a JSON file consumed by EXPERIMENTS.md Dry-run/Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+#       --shape train_4k [--multi-pod]           # one cell
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.dist.api import active_mesh
+from repro.dist.sharding import (make_batch_specs, make_cache_specs,
+                                 make_param_specs, moment_specs, rules_for)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_cache, abstract_opt_state,
+                                abstract_params, decode_input_specs,
+                                input_specs)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# serve-mode FSDP threshold: per-chip weight bytes above which weights are
+# sharded over `data` too (see DESIGN.md §6)
+SERVE_FSDP_BYTES = 8e9
+
+
+def pad_vocab(cfg):
+    """Pad vocab to a multiple of 16 for model-axis sharding (loss masks
+    the padded columns via cfg.vocab_real)."""
+    v = cfg.vocab
+    if v % 16 == 0:
+        return cfg
+    vp = -(-v // 16) * 16
+    return dataclasses.replace(cfg, vocab=vp, vocab_real=v)
+
+
+def layers_scaled(cfg, k: int):
+    """Depth-k variant used by the cost probes (hybrid: k groups)."""
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=cfg.shared_attn_every * k)
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+def depth_units(cfg) -> float:
+    if cfg.family == "hybrid":
+        return cfg.n_layers / cfg.shared_attn_every
+    return float(cfg.n_layers)
+
+
+def _compile_cell(cfg, shape, mesh, *, fsdp_train: bool = True,
+                  donate: bool = True, q_block: int = 512,
+                  kv_block: int = 512, variant: dict | None = None):
+    """Lower + compile one step; returns (compiled, lower_s, compile_s).
+
+    ``variant`` carries hillclimb levers: rules fields (tp2d,
+    kv_seq_model, dp_only, fsdp) and api options (seq_parallel, moe_ep,
+    dp_all) — see EXPERIMENTS.md §Perf.
+    """
+    import repro.dist.api as dapi
+    variant = dict(variant or {})
+    api_opts = {k: variant.pop(k) for k in
+                ("seq_parallel", "moe_ep", "moe_gather_w", "moe_groups",
+                 "dp_all") if k in variant}
+    rules = rules_for(cfg, mesh, shape, fsdp=variant.pop("fsdp", fsdp_train))
+    if variant:
+        rules = dataclasses.replace(rules, **variant)
+    pshapes, axes = abstract_params(cfg)
+    t0 = time.time()
+    with mesh, active_mesh(mesh), dapi.options(**api_opts):
+        if shape.kind == "train":
+            pspecs = make_param_specs(axes, pshapes, mesh, rules)
+            oshapes = abstract_opt_state(pshapes)
+            ospecs = {
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()),
+                "mu": moment_specs(axes, pshapes, mesh, rules),
+                "nu": moment_specs(axes, pshapes, mesh, rules),
+            }
+            state_shapes = {"params": pshapes, "opt": oshapes}
+            state_specs = {"params": pspecs, "opt": ospecs}
+            batch_shapes = input_specs(cfg, shape)
+            bspecs = make_batch_specs(batch_shapes, mesh,
+                                      all_axes=rules.dp_only)
+            step = make_train_step(cfg, q_block=q_block, kv_block=kv_block)
+            jitted = jax.jit(step,
+                             in_shardings=(state_specs, bspecs),
+                             out_shardings=(state_specs, None),
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            rules_serve = dataclasses.replace(
+                rules, fsdp=_serve_fsdp(cfg, mesh), zero1=False)
+            pspecs = make_param_specs(axes, pshapes, mesh, rules_serve)
+            batch_shapes = input_specs(cfg, shape)
+            bspecs = make_batch_specs(batch_shapes, mesh)
+            step = make_prefill_step(cfg, q_block=q_block,
+                                     kv_block=kv_block)
+            jitted = jax.jit(step, in_shardings=(pspecs, bspecs))
+            lowered = jitted.lower(pshapes, batch_shapes)
+        else:  # decode
+            rules_serve = dataclasses.replace(
+                rules, fsdp=_serve_fsdp(cfg, mesh), zero1=False)
+            pspecs = make_param_specs(axes, pshapes, mesh, rules_serve)
+            cshapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            cspecs = make_cache_specs(cshapes, mesh, rules_serve,
+                                      shape.global_batch)
+            batch_shapes = decode_input_specs(cfg, shape)
+            bspecs = make_batch_specs(batch_shapes, mesh)
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(pspecs, cspecs, bspecs, None),
+                             out_shardings=(None, cspecs),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(pshapes, cshapes, batch_shapes,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _probe_costs(cfg, shape, mesh, **kw):  # kw may carry variant=...
+    """Compile depth-1 / depth-2 variants with UNROLLED attention and
+    extrapolate per-step flops / bytes / collective-link-bytes.
+
+    XLA's cost_analysis counts while-loop bodies ONCE regardless of trip
+    count (verified empirically), so the full-depth compile undercounts
+    everything inside the layer scan and the flash-attention block scans.
+    The probes disable those loops (q_block=kv_block=seq) and vary depth;
+    per-layer deltas reconstruct the true totals:
+        X(L) = X(1) + (units - 1) * [X(2) - X(1)]
+    """
+    vals = []
+    for k in (1, 2):
+        cfg_k = dataclasses.replace(layers_scaled(cfg, k),
+                                    scan_layers=False)
+        compiled, _, _ = _compile_cell(
+            cfg_k, shape, mesh, q_block=shape.seq_len,
+            kv_block=shape.seq_len, donate=False, **kw)
+        cost = compiled.cost_analysis() or {}
+        coll = rl.parse_collectives(compiled.as_text())
+        vals.append((float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(coll.link_bytes)))
+    units = depth_units(cfg)
+    out = tuple(v1 + (units - 1.0) * (v2 - v1)
+                for v1, v2 in zip(vals[0], vals[1]))
+    return {"flops": out[0], "bytes_accessed": out[1],
+            "link_bytes": out[2],
+            "probe_l1": vals[0], "probe_l2": vals[1], "units": units}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               *, fsdp_train: bool = True, probe: bool = True,
+               variant: dict | None = None):
+    cfg = pad_vocab(get_arch(arch))
+    if variant and "remat_policy" in variant:
+        variant = dict(variant)
+        cfg = dataclasses.replace(cfg,
+                                  remat_policy=variant.pop("remat_policy"))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    # 1) FULL-depth compile: the sharding + memory proof
+    compiled, t_lower, t_compile = _compile_cell(
+        cfg, shape, mesh, fsdp_train=fsdp_train, variant=variant)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll_full = rl.parse_collectives(hlo)
+
+    # 2) cost probes (single-pod roofline numbers)
+    corrected = _probe_costs(cfg, shape, mesh, fsdp_train=fsdp_train,
+                             variant=variant) if probe else None
+    eff_cost = {"flops": corrected["flops"],
+                "bytes accessed": corrected["bytes_accessed"]} \
+        if corrected else cost
+    roof = rl.roofline_from(eff_cost, "", cfg, shape, n_chips)
+    link_bytes = corrected["link_bytes"] if corrected \
+        else coll_full.link_bytes
+    roof.collective_s = link_bytes / rl.LINK_BW
+    # memory term from the analytical HBM model (TPU-fusion-realistic);
+    # the raw HLO bytes stay recorded in cost/cost_raw.
+    kv_extra = 16 if (variant or {}).get("kv_seq_model") else 1
+    mem_bytes_analytical = rl.analytical_memory_bytes(
+        cfg, shape, n_chips, kv_extra_shard=kv_extra)
+    roof.memory_s = mem_bytes_analytical / rl.HBM_BW
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "cost_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "cost": {
+            "flops": float(eff_cost.get("flops", 0.0)),
+            "bytes_accessed": float(eff_cost.get("bytes accessed", 0.0)),
+            "corrected_by_probes": bool(corrected),
+        },
+        "collectives": {
+            "counts": coll_full.counts,
+            "bytes_by_kind": {k: float(v)
+                              for k, v in coll_full.bytes_by_kind.items()},
+            "link_bytes_full_compile": float(coll_full.link_bytes),
+            "link_bytes": float(link_bytes),
+        },
+        "roofline": {
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "memory_bytes_analytical": mem_bytes_analytical,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "model_flops_per_chip": roof.model_flops_per_chip,
+            "useful_flops_ratio": roof.useful_flops_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+        },
+    }
+    return rec
+
+
+def _serve_fsdp(cfg, mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    per_chip = cfg.param_count() * 2 / sizes.get("model", 1)
+    return per_chip > SERVE_FSDP_BYTES
+
+
+def cells(multi_pod: bool):
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape):
+                continue
+            yield arch, sname, multi_pod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    todo = list(cells(args.multi_pod)) if args.all else \
+        [(args.arch, args.shape, args.multi_pod)]
+    failures = []
+    for arch, sname, mp in todo:
+        tag = f"{arch}__{sname}__{'2x16x16' if mp else '16x16'}"
+        try:
+            # probes (roofline cost correction) only for the single-pod
+            # roofline table; multi-pod cells prove the pod axis shards
+            rec = lower_cell(arch, sname, mp, probe=not mp)
+            path = out_dir / f"{tag}.json"
+            path.write_text(json.dumps(rec, indent=1))
+            r = rec["roofline"]
+            print(f"OK   {tag:60s} compile={rec['compile_s']:6.1f}s "
+                  f"dom={r['dominant']:10s} "
+                  f"comp={r['compute_s']*1e3:8.2f}ms "
+                  f"mem={r['memory_s']*1e3:8.2f}ms "
+                  f"coll={r['collective_s']*1e3:8.2f}ms "
+                  f"frac={r['roofline_fraction']:.3f}", flush=True)
+        except Exception as e:  # noqa: BLE001 — report, continue sweep
+            failures.append((tag, repr(e)))
+            print(f"FAIL {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        raise SystemExit(1)
+    print(f"\nall {len(todo)} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+shardable, zero allocation) + abstract params/caches via eval_shape."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Stand-ins for one step's data inputs (train or prefill)."""
+    B = shape.global_batch
+    S = shape.seq_len
+    d = {}
+    if cfg.input_kind == "embeds":
+        d["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        d["positions"] = SDS((3, B, S), jnp.int32)
+    elif cfg.input_kind == "codes":
+        d["tokens"] = SDS((B, S, cfg.n_codebooks), jnp.int32)
+    else:
+        d["tokens"] = SDS((B, S), jnp.int32)
+    if shape.kind == "train":
+        if cfg.input_kind == "codes":
+            d["labels"] = SDS((B, S, cfg.n_codebooks), jnp.int32)
+        else:
+            d["labels"] = SDS((B, S), jnp.int32)
+    return d
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    d = {}
+    if cfg.input_kind == "embeds":
+        d["embeds"] = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+        d["positions"] = SDS((3, B, 1), jnp.int32)
+    elif cfg.input_kind == "codes":
+        d["tokens"] = SDS((B, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        d["tokens"] = SDS((B, 1), jnp.int32)
+    return d
+
+
+def abstract_params(cfg: ArchConfig):
+    """(param ShapeDtypeStructs, logical axes pytree) without allocation."""
+    box = {}
+
+    def f(key):
+        p, ax = lm.init_params(cfg, key)
+        box["ax"] = ax
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["ax"]
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, batch, max_seq))
+
+
+def abstract_opt_state(param_shapes):
+    from ..optim import adamw_init
+    return jax.eval_shape(adamw_init, param_shapes)

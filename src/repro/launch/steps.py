@@ -1,0 +1,42 @@
+"""Step factories: train_step / prefill_step / decode_step closures over an
+ArchConfig, ready for jit with explicit in/out shardings."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from ..optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig = AdamWConfig(),
+                    *, q_block=512, kv_block=512):
+    def train_step(state, batch):
+        def loss(p):
+            return lm.loss_fn(p, cfg, batch, q_block=q_block,
+                              kv_block=kv_block)
+        lval, grads = jax.value_and_grad(loss)(state["params"])
+        new_p, new_opt, _ = adamw_update(opt, state["params"], grads,
+                                         state["opt"])
+        return {"params": new_p, "opt": new_opt}, lval
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, q_block=512, kv_block=512):
+    def prefill_step(params, batch):
+        hidden = lm.forward(params, cfg, batch, q_block=q_block,
+                            kv_block=kv_block, return_hidden=True)
+        # head applied to the last position only (next-token logits)
+        return lm.apply_head(params, cfg, hidden[:, -1])
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, batch, pos):
+        logits, cache = lm.decode_step(params, cfg, cache, batch, pos)
+        return logits[:, -1], cache
+    return decode_step

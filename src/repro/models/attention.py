@@ -1,0 +1,160 @@
+"""GQA attention: blockwise-streaming (flash-style) train/prefill path and
+a direct masked-softmax decode path.
+
+Train/prefill uses a two-level lax.scan over (q-block, kv-block) with a
+running (max, denom, acc) accumulator so the S x S score matrix is never
+materialized — mandatory at seq 32k+.  Causality is enforced by block
+masking; fully-masked kv blocks still execute (static trip counts), which
+costs ~2x the causal-ideal FLOPs; see EXPERIMENTS.md §Perf for the
+hillclimb that skips them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, apply_mrope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, dtype):
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d, KH * hd), dtype),
+        "wv": dense_init(ks[2], (d, KH * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype),
+    }
+    ax = {
+        "wq": ("embed", "heads_flat"),
+        "wk": ("embed", "kv_flat"),
+        "wv": ("embed", "kv_flat"),
+        "wo": ("heads_flat", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KH * hd,), dtype)
+        p["bv"] = jnp.zeros((KH * hd,), dtype)
+        ax["bq"] = ("heads_flat",)
+        ax["bk"] = ("kv_flat",)
+        ax["bv"] = ("kv_flat",)
+    return p, ax
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, d = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    if cfg.rope == "mrope":
+        q = apply_mrope(q, positions)
+        k = apply_mrope(k, positions)
+    else:
+        pos = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_block: int = 512, kv_block: int = 512):
+    """q (B,S,H,D), k/v (B,S,KH,D), GQA via head grouping. Blockwise scan."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / (D ** 0.5)
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    nq, nk = S // q_block, S // kv_block
+    assert S % q_block == 0 and S % kv_block == 0
+    qb = q.reshape(B, nq, q_block, KH, G, D)
+    kb = k.reshape(B, nk, kv_block, KH, D)
+    vb = v.reshape(B, nk, kv_block, KH, D)
+
+    def do_qblock(qi, qblk):
+        # qblk (B, q_block, KH, G, D)
+        acc0 = jnp.zeros((B, q_block, KH, G, D), jnp.float32)
+        m0 = jnp.full((B, q_block, KH, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_block, KH, G), jnp.float32)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk = jax.lax.dynamic_index_in_dim(kb, ki, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, ki, 1, keepdims=False)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            if causal:
+                qpos = qi * q_block + jnp.arange(q_block)
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vblk.astype(jnp.float32))
+            return (acc, m_new, l_new), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: do_qblock(*args),
+                      (jnp.arange(nq), jnp.swapaxes(qb, 0, 1)))
+    out = jnp.swapaxes(out, 0, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def attn_forward(p, x, cfg, positions, *, q_block=512, kv_block=512):
+    """Training / prefill attention (no cache). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = flash_attention(q, k, v, causal=True,
+                        q_block=q_block, kv_block=kv_block)
+    o = jnp.einsum("bshd,hdz->bsz", o,
+                   p["wo"].reshape(cfg.n_heads, cfg.head_dim, cfg.d_model))
+    return o, (k, v)
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, cfg):
+    """One-token decode. x (B,1,d); cache (B,Smax,KH,hd); pos () int32.
+
+    Softmax runs over the full static cache with a position mask, so the
+    kv-seq axis may be sharded (long_500k shards it over `data`): the max
+    and sum reductions become cross-device collectives automatically.
+    """
+    B = x.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KH
+    positions = jnp.full((B, 1), pos, jnp.int32) if cfg.rope != "mrope" \
+        else jnp.full((3, B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=1)
+    Smax = cache_k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, 1, KH, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * scale
+    valid = jnp.arange(Smax) <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", w, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, H, hd).astype(x.dtype)
+    o = jnp.einsum("bshd,hdz->bsz", o,
+                   p["wo"].reshape(H, hd, cfg.d_model))
+    return o, cache_k, cache_v

@@ -1,0 +1,97 @@
+"""Shared layer primitives: norms, rotary embeddings, FFN activations.
+
+Everything is functional (params = nested dicts of jnp arrays) and carries
+parallel "logical axis" metadata pytrees used by dist/sharding.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    v = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(v + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def sq_relu_ffn(x, w_up, w_down):
+    """Nemotron-4 squared-ReLU FFN (Primer): relu(xW1)^2 W2."""
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    r = jax.nn.relu(u)
+    return jnp.einsum("...f,fd->...d", r * r, w_down)
+
+
+# ------------------------- rotary embeddings -------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (..., S, H, D); positions (..., S) int32 broadcastable."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = jnp.asarray(rope_freqs(D, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+MROPE_SECTIONS = (16, 24, 24)   # qwen2-vl: temporal/height/width half-dims
+
+
+def mrope_sections(half: int) -> tuple[int, int, int]:
+    """Qwen2-VL uses (16,24,24) at head_dim=128; scale proportionally for
+    reduced smoke configs."""
+    t = max(half * 16 // 64, 1)
+    h = max(half * 24 // 64, 1)
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x, positions3, theta: float = 1000000.0, sections=None):
+    """Qwen2-VL M-RoPE. x (B, S, H, D); positions3 (3, B, S).
+
+    The rotary half-dim is split into (t, h, w) sections, each rotated by
+    its own position stream (equal streams reduce to plain RoPE).
+    """
+    D = x.shape[-1]
+    half = D // 2
+    if sections is None:
+        sections = mrope_sections(half)
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(D, theta), jnp.float32)    # (half,)
+    # build a (B, S, half) angle with per-section position stream
+    angs = []
+    off = 0
+    for s_i, sec in enumerate(sections):
+        pos = positions3[s_i]                                  # (B, S)
+        angs.append(pos[..., None].astype(jnp.float32) * freqs[off:off + sec])
+        off += sec
+    ang = jnp.concatenate(angs, axis=-1)                      # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# ------------------------- init helpers -------------------------
+
+def dense_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

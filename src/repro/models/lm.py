@@ -1,0 +1,404 @@
+"""Model assembly: embeddings -> scanned blocks -> head, for all families
+(dense / moe / ssm / vlm / audio / hybrid), with train, prefill and decode
+entry points.
+
+Layer parameters are stacked along a leading "layers" axis and driven by
+``lax.scan`` so the HLO stays one-layer-sized — essential for the 96-layer
+dry-run compiles.  KV caches / SSM states are likewise stacked.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..dist.api import constrain, get_option
+from .attention import init_attn, attn_forward, attn_decode
+from .layers import rms_norm, swiglu, sq_relu_ffn, dense_init
+from .moe import init_moe, moe_ffn
+from .ssm import init_ssm, ssd_forward, ssd_decode
+
+PyTree = Any
+
+
+def _ckpt(f, cfg):
+    """Remat wrapper honoring cfg.remat_policy (§Perf lever: "dots" saves
+    matmul outputs so the backward does not re-pay TP all-reduces)."""
+    if not cfg.remat:
+        return f
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+def _cx(x):
+    """Residual-stream constraint at block boundaries.  With seq_parallel
+    (hillclimb lever) the sequence dim is sharded over `model` between
+    blocks (Korthikanti-style sequence parallelism): norms/elementwise run
+    1/|model| as wide, and GSPMD turns the per-layer all-reduces into
+    all-gather + reduce-scatter pairs of the same payload but half the
+    resident traffic."""
+    if get_option("seq_parallel") and x.ndim == 3:
+        return constrain(x, "batch", "model", None)
+    return constrain(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------
+
+def _init_ffn(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "sq_relu":
+        p = {"w_up": dense_init(ks[0], (d, f), dtype),
+             "w_down": dense_init(ks[1], (f, d), dtype)}
+        ax = {"w_up": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+    else:
+        p = {"w_gate": dense_init(ks[0], (d, f), dtype),
+             "w_up": dense_init(ks[1], (d, f), dtype),
+             "w_down": dense_init(ks[2], (f, d), dtype)}
+        ax = {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+              "w_down": ("ffn", "embed")}
+    return p, ax
+
+
+def _init_block(key, cfg, dtype):
+    """One transformer block (dense or MoE)."""
+    ks = jax.random.split(key, 4)
+    attn_p, attn_ax = init_attn(ks[0], cfg, dtype)
+    if cfg.moe_experts:
+        ffn_p, ffn_ax = init_moe(ks[1], cfg, dtype)
+    else:
+        ffn_p, ffn_ax = _init_ffn(ks[1], cfg, dtype)
+    p = {"attn": attn_p, "ffn": ffn_p,
+         "ln1": jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    ax = {"attn": attn_ax, "ffn": ffn_ax,
+          "ln1": ("embed",), "ln2": ("embed",)}
+    return p, ax
+
+
+def _init_ssm_block(key, cfg, dtype):
+    p_ssm, ax_ssm = init_ssm(key, cfg, dtype)
+    p = {"ssm": p_ssm, "ln": jnp.ones((cfg.d_model,), dtype)}
+    ax = {"ssm": ax_ssm, "ln": ("embed",)}
+    return p, ax
+
+
+def _stack_init(fn, key, n, cfg, dtype):
+    keys = jax.random.split(key, n)
+    p0, ax = fn(keys[0], cfg, dtype)
+    ps = jax.vmap(lambda k: fn(k, cfg, dtype)[0])(keys)
+    ax = jax.tree.map(lambda a: ("layers",) + a, ax,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return ps, ax
+
+
+def init_params(cfg: ArchConfig, key) -> tuple[PyTree, PyTree]:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    params: dict = {}
+    axes: dict = {}
+    # embeddings
+    if cfg.input_kind == "codes":
+        params["embed"] = dense_init(ks[0], (cfg.n_codebooks, cfg.vocab,
+                                             cfg.d_model), dtype)
+        axes["embed"] = (None, "vocab", "embed")
+        params["head"] = dense_init(ks[1], (cfg.n_codebooks, cfg.d_model,
+                                            cfg.vocab), dtype)
+        axes["head"] = (None, "embed", "vocab")
+    else:
+        params["embed"] = dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype)
+        axes["embed"] = ("vocab", "embed")
+        params["head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dtype)
+        axes["head"] = ("embed", "vocab")
+    params["ln_f"] = jnp.ones((cfg.d_model,), dtype)
+    axes["ln_f"] = ("embed",)
+
+    if cfg.family == "ssm":
+        params["blocks"], axes["blocks"] = _stack_init(
+            _init_ssm_block, ks[2], cfg.n_layers, cfg, dtype)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        n_tail = cfg.n_layers - n_groups * every
+        gk = jax.random.split(ks[2], n_groups)
+        p0, ax_in = _stack_init(_init_ssm_block, gk[0], every, cfg, dtype)
+        pg = jax.vmap(lambda k: _stack_init(_init_ssm_block, k, every,
+                                            cfg, dtype)[0])(gk)
+        params["groups"] = pg
+        axes["groups"] = jax.tree.map(
+            lambda a: ("groups",) + a, ax_in,
+            is_leaf=lambda x: isinstance(x, tuple))
+        if n_tail:
+            params["tail"], axes["tail"] = _stack_init(
+                _init_ssm_block, ks[3], n_tail, cfg, dtype)
+        params["shared"], axes["shared"] = _init_block(ks[4], cfg, dtype)
+    else:
+        params["blocks"], axes["blocks"] = _stack_init(
+            _init_block, ks[2], cfg.n_layers, cfg, dtype)
+    return params, axes
+
+
+# ---------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------
+
+def _block_fwd(p, x, cfg, positions, q_block, kv_block):
+    x = _cx(x)
+    h, _ = attn_forward(p["attn"], rms_norm(x, p["ln1"]), cfg, positions,
+                        q_block=q_block, kv_block=kv_block)
+    x = x + h
+    z = rms_norm(x, p["ln2"])
+    if cfg.moe_experts:
+        B, S, d = z.shape
+        y = moe_ffn(p["ffn"], z.reshape(B * S, d), cfg).reshape(B, S, d)
+    elif cfg.act == "sq_relu":
+        y = sq_relu_ffn(z, p["ffn"]["w_up"], p["ffn"]["w_down"])
+    else:
+        y = swiglu(z, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                   p["ffn"]["w_down"])
+    return _cx(x + y)
+
+
+def _ssm_block_fwd(p, x, cfg):
+    x = _cx(x)
+    h, st, conv = ssd_forward(p["ssm"], rms_norm(x, p["ln"]), cfg)
+    return _cx(x + h), st, conv
+
+
+def _embed(params, cfg, batch):
+    if cfg.input_kind == "embeds":
+        return batch["embeds"]
+    if cfg.input_kind == "codes":
+        toks = batch["tokens"]                       # (B, S, nq)
+        outs = [params["embed"][q][toks[..., q]]
+                for q in range(cfg.n_codebooks)]
+        return sum(outs)
+    return params["embed"][batch["tokens"]]
+
+
+def _positions(cfg, batch, B, S):
+    if cfg.rope == "mrope":
+        return batch.get("positions",
+                         jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                          (3, B, S)))
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def _scan_layers(f, x, xs, scan: bool):
+    """lax.scan over stacked layer params, or a python-unrolled loop (the
+    dry-run cost probes unroll so XLA cost analysis sees every layer)."""
+    if scan:
+        x, _ = jax.lax.scan(f, x, xs)
+        return x
+    L = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(L):
+        x, _ = f(x, jax.tree.map(lambda a: a[i], xs))
+    return x
+
+
+def forward(params, cfg: ArchConfig, batch, *, q_block=512, kv_block=512,
+            return_hidden: bool = False):
+    """Full-sequence forward -> logits (B, S, V[, nq])."""
+    x = _embed(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, batch, B, S)
+
+    if cfg.family == "ssm":
+        def body(xc, p):
+            out, _, _ = _ssm_block_fwd(p, xc, cfg)
+            return out, None
+        f = _ckpt(body, cfg)
+        x = _scan_layers(f, x, params["blocks"], cfg.scan_layers)
+    elif cfg.family == "hybrid":
+        def inner(xc2, p):
+            out, _, _ = _ssm_block_fwd(p, xc2, cfg)
+            return out, None
+
+        def group(xc, pg):
+            xc = _scan_layers(inner, xc, pg, cfg.scan_layers)
+            xc = _block_fwd(params["shared"], xc, cfg, positions,
+                            q_block, kv_block)
+            return xc, None
+        g = _ckpt(group, cfg)
+        x = _scan_layers(g, x, params["groups"], cfg.scan_layers)
+        if "tail" in params:
+            f = _ckpt(inner, cfg)
+            x = _scan_layers(f, x, params["tail"], cfg.scan_layers)
+    else:
+        def body(xc, p):
+            return _block_fwd(p, xc, cfg, positions, q_block, kv_block), None
+        f = _ckpt(body, cfg)
+        x = _scan_layers(f, x, params["blocks"], cfg.scan_layers)
+
+    x = rms_norm(x, params["ln_f"])
+    if return_hidden:
+        return x
+    if cfg.input_kind == "codes":
+        return jnp.einsum("bsd,qdv->bsqv", x, params["head"])
+    return jnp.einsum("bsd,dv->bsv", x, params["head"])
+
+
+def apply_head(params, cfg: ArchConfig, x):
+    if cfg.input_kind == "codes":
+        return jnp.einsum("b...d,qdv->b...qv", x, params["head"])
+    return jnp.einsum("b...d,dv->b...v", x, params["head"])
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, q_block=512, kv_block=512):
+    """Vocab-parallel cross entropy: the gold logit is extracted with an
+    iota-compare masked sum (NOT take_along_axis, which would make GSPMD
+    all-gather the vocab-sharded logits — tens of GB at 150k vocab), and
+    logsumexp reduces over the sharded vocab axis with tiny (B,S)
+    all-reduces."""
+    logits = forward(params, cfg, batch, q_block=q_block, kv_block=kv_block)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    iota_v = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    if getattr(cfg, "vocab_real", 0) and cfg.vocab_real < cfg.vocab:
+        # dry-run vocab padding (sharding divisibility): mask padded columns
+        lf = jnp.where(iota_v < cfg.vocab_real, lf, -1e30)
+    m = jnp.max(lf, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lf - m[..., None]), axis=-1))
+    is_gold = iota_v == labels[..., None].astype(jnp.int32)
+    gold = jnp.sum(jnp.where(is_gold, lf, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------
+# serving: prefill + decode with static-shape caches
+# ---------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int, dtype=None):
+    """Static-geometry cache pytree (paper §3.2: allocate once, reuse)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = d_in // cfg.ssm_headdim
+        ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "state": jnp.zeros((cfg.n_layers, batch_size, H,
+                                cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1,
+                               ch), dtype),
+        }
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        n_tail = cfg.n_layers - n_groups * every
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = d_in // cfg.ssm_headdim
+        ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache = {
+            "state": jnp.zeros((n_groups, every, batch_size, H,
+                                cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+            "conv": jnp.zeros((n_groups, every, batch_size,
+                               cfg.ssm_conv - 1, ch), dtype),
+            "k": jnp.zeros((n_groups, batch_size, max_seq, KH, hd), dtype),
+            "v": jnp.zeros((n_groups, batch_size, max_seq, KH, hd), dtype),
+        }
+        if n_tail:
+            cache["state_tail"] = jnp.zeros(
+                (n_tail, batch_size, H, cfg.ssm_state, cfg.ssm_headdim),
+                jnp.float32)
+            cache["conv_tail"] = jnp.zeros(
+                (n_tail, batch_size, cfg.ssm_conv - 1, ch), dtype)
+        return cache
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch_size, max_seq, KH, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch_size, max_seq, KH, hd), dtype),
+    }
+
+
+def _scan_with_ys(f, x, xs, scan: bool):
+    if scan:
+        return jax.lax.scan(f, x, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x, y = f(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    return x, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def decode_step(params, cfg: ArchConfig, cache, batch, pos):
+    """One token for the whole batch. batch: tokens (B,1[,nq]) or embeds
+    (B,1,d); pos: () int32 current position. Returns (logits, cache)."""
+    x = _embed(params, cfg, batch)
+    B = x.shape[0]
+
+    if cfg.family == "ssm":
+        def body(xc, sc):
+            p, st, conv = sc
+            h, st2, conv2 = ssd_decode(p["ssm"], rms_norm(xc, p["ln"]),
+                                       st, conv, cfg)
+            return xc + h, (st2, conv2)
+        x, (st2, conv2) = _scan_with_ys(
+            body, x, (params["blocks"], cache["state"], cache["conv"]),
+            cfg.scan_layers)
+        cache = {"state": st2, "conv": conv2}
+    elif cfg.family == "hybrid":
+        def inner(xc, sc):
+            p, st, conv = sc
+            h, st2, conv2 = ssd_decode(p["ssm"], rms_norm(xc, p["ln"]),
+                                       st, conv, cfg)
+            return xc + h, (st2, conv2)
+
+        def group(xc, sc):
+            pg, st, conv, ck, cv = sc
+            xc, (st2, conv2) = _scan_with_ys(inner, xc, (pg, st, conv),
+                                             cfg.scan_layers)
+            pa = params["shared"]
+            h, ck2, cv2 = attn_decode(pa["attn"], rms_norm(xc, pa["ln1"]),
+                                      ck, cv, pos, cfg)
+            xc = xc + h
+            z = rms_norm(xc, pa["ln2"])
+            y = swiglu(z, pa["ffn"]["w_gate"], pa["ffn"]["w_up"],
+                       pa["ffn"]["w_down"])
+            return xc + y, (st2, conv2, ck2, cv2)
+
+        x, (st2, conv2, ck2, cv2) = _scan_with_ys(
+            group, x, (params["groups"], cache["state"], cache["conv"],
+                       cache["k"], cache["v"]), cfg.scan_layers)
+        new_cache = {"state": st2, "conv": conv2, "k": ck2, "v": cv2}
+        if "tail" in params:
+            x, (st_t, conv_t) = _scan_with_ys(
+                inner, x, (params["tail"], cache["state_tail"],
+                           cache["conv_tail"]), cfg.scan_layers)
+            new_cache["state_tail"] = st_t
+            new_cache["conv_tail"] = conv_t
+        cache = new_cache
+    else:
+        def body(xc, sc):
+            p, ck, cv = sc
+            h, ck2, cv2 = attn_decode(p["attn"], rms_norm(xc, p["ln1"]),
+                                      ck, cv, pos, cfg)
+            xc = xc + h
+            z = rms_norm(xc, p["ln2"])
+            if cfg.moe_experts:
+                y = moe_ffn(p["ffn"], z.reshape(B, -1), cfg).reshape(z.shape)
+            elif cfg.act == "sq_relu":
+                y = sq_relu_ffn(z, p["ffn"]["w_up"], p["ffn"]["w_down"])
+            else:
+                y = swiglu(z, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                           p["ffn"]["w_down"])
+            return xc + y, (ck2, cv2)
+        x, (ck2, cv2) = _scan_with_ys(
+            body, x, (params["blocks"], cache["k"], cache["v"]),
+            cfg.scan_layers)
+        cache = {"k": ck2, "v": cv2}
+
+    x = rms_norm(x, params["ln_f"])
+    if cfg.input_kind == "codes":
+        logits = jnp.einsum("bsd,qdv->bsqv", x, params["head"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return logits, cache

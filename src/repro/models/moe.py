@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort-based dispatch.
+
+Dispatch is scatter/gather (no (T, E, C) one-hot einsum, which would be
+O(T*E*C) memory): assignments are ranked within their expert via a sorted
+segment-rank, tokens beyond capacity are dropped (GShard semantics), and
+expert FFNs run as one batched einsum over the (E, C, d) buffer, which is
+sharded expert-major over the `model` mesh axis (EP).  Token->expert
+redistribution therefore lowers to an all-to-all-ish collective under
+GSPMD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.api import constrain, get_option
+from .layers import dense_init
+
+
+def init_moe(key, cfg, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), dtype),
+        "w_up": dense_init(ks[2], (E, d, f), dtype),
+        "w_down": dense_init(ks[3], (E, f, d), dtype),
+    }
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "ffn"),
+        "w_up": ("experts", "embed", "ffn"),
+        "w_down": ("experts", "ffn", "embed"),
+    }
+    return p, ax
+
+
+def moe_ffn(p, x, cfg, capacity_factor: float = 1.25):
+    """x (T, d) -> (T, d).  top_k routing, capacity C = T*k/E * cf.
+
+    With the ``moe_groups`` option set to G (hillclimb lever, GShard-style
+    grouped dispatch), tokens are split into G groups sharded over `data`;
+    routing/sort/scatter run batched per group, so no global sort or
+    gather of the token axis ever crosses chips."""
+    G = get_option("moe_groups") or 0
+    if G and x.shape[0] % G == 0:
+        return _moe_grouped(p, x, cfg, capacity_factor, G)
+    return _moe_dispatch(p, x, cfg, capacity_factor)
+
+
+def _moe_grouped(p, x, cfg, capacity_factor: float, G: int):
+    """GShard grouped dispatch with an EXPLICIT group axis.
+
+    Groups are data-sharded, so routing/sort/rank/scatter are chip-local;
+    the (G, E, C', d) buffer is then re-laid-out expert-major over `model`
+    (GSPMD lowers that to the canonical MoE all-to-all), expert FFNs run
+    expert-parallel, and results come back the same way."""
+    T, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    Tg = T // G
+    C = max(int(Tg * k * capacity_factor / E), 1)
+    xg = constrain(x.reshape(G, Tg, d), "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    topv, topi = jax.lax.top_k(logits, k)                  # (G,Tg,k)
+    gates = jax.nn.softmax(topv, axis=-1)
+    N = Tg * k
+    flat_e = topi.reshape(G, N)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, N))
+    flat_g = gates.reshape(G, N)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    first = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(
+        e_sorted)                                          # (G,E)
+    rank_sorted = jnp.arange(N)[None] - jnp.take_along_axis(
+        first, e_sorted, axis=1)
+    rank = jnp.zeros((G, N), jnp.int32).at[
+        jnp.arange(G)[:, None], order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    e_idx = jnp.where(keep, flat_e, 0)
+    r_idx = jnp.where(keep, rank, 0)
+    gi = jnp.arange(G)[:, None]
+    contrib = jnp.where(keep[..., None],
+                        jnp.take_along_axis(xg, flat_t[..., None], axis=1),
+                        0)
+    buf = jnp.zeros((G, E, C, d), x.dtype)
+    buf = buf.at[gi, e_idx, r_idx].add(contrib.astype(x.dtype))
+    if get_option("moe_ep"):
+        # all-to-all: (G/data, E, C, d) -> (G, E/model, C, d)
+        buf = constrain(buf, None, "model", None, None)
+    else:
+        buf = constrain(buf, "batch", None, None, None)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if get_option("moe_gather_w"):
+        wg = constrain(wg, "model", None, None)
+        wu = constrain(wu, "model", None, None)
+        wd = constrain(wd, "model", None, None)
+    g_ = jnp.einsum("gecd,edf->gecf", buf, wg)
+    u_ = jnp.einsum("gecd,edf->gecf", buf, wu)
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g_) * u_, wd)
+    if get_option("moe_ep"):
+        y = constrain(y, None, "model", None, None)
+    else:
+        y = constrain(y, "batch", None, None, None)
+    out_flat = y[gi, e_idx, r_idx]                          # (G,N,d)
+    out_flat = jnp.where(keep[..., None], out_flat, 0)
+    out_flat = out_flat.astype(jnp.float32) * flat_g[..., None]
+    out = jnp.zeros((G, Tg, d), jnp.float32).at[gi, flat_t].add(out_flat)
+    out = constrain(out.astype(x.dtype), "batch", None, None)
+    return out.reshape(T, d)
+
+
+def _moe_dispatch(p, x, cfg, capacity_factor: float = 1.25):
+    T, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    C = max(int(T * k * capacity_factor / E), 1)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    topv, topi = jax.lax.top_k(logits, k)                   # (T, k)
+    gates = jax.nn.softmax(topv, axis=-1)                   # (T, k)
+
+    flat_e = topi.reshape(-1)                               # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+    # sort assignments by expert; rank within expert = idx - first idx of e
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    first = jnp.searchsorted(e_sorted, jnp.arange(E))       # (E,)
+    rank_sorted = jnp.arange(T * k) - first[e_sorted]
+    rank = jnp.zeros(T * k, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    # scatter tokens into the (E, C, d) expert buffer
+    buf = jnp.zeros((E, C, d), x.dtype)
+    e_idx = jnp.where(keep, flat_e, 0)
+    r_idx = jnp.where(keep, rank, 0)
+    contrib = jnp.where(keep[:, None], x[flat_t], 0)
+    buf = buf.at[e_idx, r_idx].add(contrib.astype(x.dtype))
+    if get_option("moe_ep"):
+        # hillclimb lever: pin the dispatch buffer expert-major over
+        # `model` (EP) so token->expert redistribution is one all-to-all
+        # instead of whatever GSPMD propagates from the scatter.
+        buf = constrain(buf, "model", None, None)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if get_option("moe_gather_w"):
+        # hillclimb lever: explicit FSDP gather — replicate the expert
+        # weights' d/f dims at use-site (keep E over `model`).  Otherwise
+        # GSPMD keeps the FSDP shards and turns every expert einsum into a
+        # partial-sum all-reduce of the (E,C,f) activation buffer, which is
+        # ~10x larger than the weights (EXPERIMENTS.md §Perf, cell A).
+        wg = constrain(wg, "model", None, None)
+        wu = constrain(wu, "model", None, None)
+        wd = constrain(wd, "model", None, None)
+    # expert FFN (SwiGLU), batched over experts
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+    if get_option("moe_ep"):
+        y = constrain(y, "model", None, None)
+    # gather back with gate weights
+    out_flat = y[e_idx, r_idx]                              # (T*k, d)
+    out_flat = jnp.where(keep[:, None], out_flat, 0)
+    out_flat = out_flat.astype(jnp.float32) * flat_g[:, None]
+    out = jax.ops.segment_sum(out_flat, flat_t, num_segments=T)
+    return out.astype(x.dtype)
+
+
+def aux_load_balance_loss(p, x, cfg):
+    """Switch-style auxiliary loss (f_i * P_i * E), for the training loop."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(logits, axis=-1)
+    E = cfg.moe_experts
+    f = jnp.mean(jax.nn.one_hot(top1, E), axis=0)
+    P = jnp.mean(probs, axis=0)
+    return jnp.sum(f * P) * E

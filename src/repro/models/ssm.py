@@ -1,0 +1,165 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of length Q, linear state passing between chunks
+(associative scan over (decay, state) pairs).  Decode is the O(1) state
+recurrence.  All SSD internals run in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = d_in + 2 * G * N
+    ks = jax.random.split(key, 5)
+    p = {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * G * N + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+    }
+    ax = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "out_proj": ("ssm_inner", "embed"),
+        "norm_w": ("ssm_inner",),
+    }
+    return p, ax
+
+
+def _split_proj(z_all, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_in // cfg.ssm_headdim
+    z, xb, B, C, dt = jnp.split(
+        z_all, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N],
+        axis=-1)
+    return z, xb, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """x (B, S, ch); w (K, ch) depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_forward(p, x, cfg, chunk: int = 128):
+    """x (B, S, d) -> (B, S, d); returns (out, final_state, conv_tail)."""
+    Bsz, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    hd = cfg.ssm_headdim
+    H = d_in // hd
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z_all = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])
+    z, xb, Bv, Cv, dt = _split_proj(z_all, cfg)
+    conv_in = jnp.concatenate([xb, Bv, Cv], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xb, Bv, Cv = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    xh = xb.reshape(Bsz, S, H, hd).astype(jnp.float32)
+    Bh = Bv.reshape(Bsz, S, G, N).astype(jnp.float32)
+    Ch = Cv.reshape(Bsz, S, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bh, rep, axis=2)                              # (B,S,H,N)
+    Ch = jnp.repeat(Ch, rep, axis=2)
+
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    xc = xh.reshape(Bsz, nc, Q, H, hd)
+    Bc = Bh.reshape(Bsz, nc, Q, H, N)
+    Cc = Ch.reshape(Bsz, nc, Q, H, N)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    dA = dtc * A                                                  # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)                                  # (B,nc,Q,H)
+
+    # intra-chunk (quadratic within chunk)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * L
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # chunk states: state_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjh,bcjhn,bcjhp->bchnp",
+                        decay_to_end, dtc, Bc, xc)                # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    # inter-chunk associative scan over (decay, state)
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return (da * db, sb + db[..., None, None] * sa)
+
+    dec_scan, st_scan = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    # state entering chunk c = scan result of chunk c-1 (shift right)
+    st_in = jnp.concatenate(
+        [jnp.zeros_like(st_scan[:, :1]), st_scan[:, :-1]], axis=1)
+    y_inter = jnp.einsum("bcihn,bchnp,bcih->bcihp",
+                         Cc, st_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(Bsz, S, d_in)
+    # gated RMSNorm (Mamba2's norm before out_proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    out = jnp.einsum("bsz,zd->bsd", y.astype(x.dtype), p["out_proj"])
+    final_state = st_scan[:, -1]                                  # (B,H,N,P)
+    conv_tail = conv_in[:, -(cfg.ssm_conv - 1):, :]               # (B,K-1,ch)
+    return out, final_state, conv_tail
+
+
+def ssd_decode(p, x, state, conv_buf, cfg):
+    """One-token decode. x (B,1,d); state (B,H,N,P); conv_buf (B,K-1,ch)."""
+    Bsz, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    hd = cfg.ssm_headdim
+    H = d_in // hd
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z_all = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])
+    z, xb, Bv, Cv, dt = _split_proj(z_all, cfg)
+    conv_in = jnp.concatenate([xb, Bv, Cv], axis=-1)              # (B,1,ch)
+    win = jnp.concatenate([conv_buf, conv_in], axis=1)            # (B,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    xb, Bv, Cv = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xb.reshape(Bsz, H, hd).astype(jnp.float32)
+    Bh = jnp.repeat(Bv.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                       # (B,H)
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, d_in)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    out = jnp.einsum("bz,zd->bd", y.astype(x.dtype), p["out_proj"])
+    return out[:, None, :], state, win[:, 1:, :]

@@ -1,0 +1,106 @@
+"""AdamW with global-norm clipping and optional int8 gradient compression
+(error-feedback) for cross-pod reduction.
+
+Moments are fp32 regardless of param dtype; with ``zero=True`` the
+distributed layer shards moment tensors over the `data` axis (ZeRO-1) —
+see dist/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    compress_grads: bool = False      # int8 + error feedback (cross-pod)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / cfg.warmup_steps, 1.0)
+    return cfg.lr * warm
+
+
+def compress_int8(g):
+    """Symmetric per-tensor int8 quantization -> (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state,
+                 error_fb: Any = None):
+    """Returns (new_params, new_state, new_error_fb).
+
+    With compress_grads, each gradient tensor is int8-quantized (as it
+    would be before the cross-pod all-reduce) and the quantization error
+    is fed back into the next step's gradient (1-bit-Adam-style EF)."""
+    if cfg.compress_grads:
+        if error_fb is None:
+            error_fb = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                    grads)
+        gplus = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error_fb)
+        qs = jax.tree.map(compress_int8, gplus,
+                          is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        grads_c = jax.tree.map(lambda qv: decompress_int8(*qv), qs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        error_fb = jax.tree.map(lambda g, gc: g - gc, gplus, grads_c)
+        grads = grads_c
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([t[0] for t in new])
+    new_state = {
+        "step": step,
+        "mu": treedef.unflatten([t[1] for t in new]),
+        "nu": treedef.unflatten([t[2] for t in new]),
+    }
+    return new_p, new_state, error_fb

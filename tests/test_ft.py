@@ -1,0 +1,75 @@
+import time
+
+import numpy as np
+import pytest
+
+from repro.ft import CheckpointManager, StragglerMonitor, plan_remesh
+
+
+def _state(seed):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": rng.normal(size=(8, 8)).astype(np.float32),
+                       "b": rng.normal(size=(8,)).astype(np.float32)},
+            "opt": {"mu": {"w": np.zeros((8, 8), np.float32),
+                           "b": np.zeros((8,), np.float32)},
+                    "step": np.int32(0)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    s = _state(0)
+    mgr.save(10, s)
+    got, step = mgr.restore(_state(1))
+    assert step == 10
+    np.testing.assert_array_equal(got["params"]["w"], s["params"]["w"])
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for i in (1, 2, 3, 4):
+        mgr.save(i, _state(i))
+    assert mgr.steps() == [3, 4]
+    got, step = mgr.restore(_state(0))
+    assert step == 4
+    np.testing.assert_array_equal(got["params"]["w"], _state(4)["params"]["w"])
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    # corrupt the newest checkpoint
+    d = mgr.dir / "step_00000002"
+    victim = next(p for p in d.glob("*.npy"))
+    arr = np.load(victim)
+    np.save(victim, arr + 1)
+    got, step = mgr.restore(_state(0))
+    assert step == 1
+    np.testing.assert_array_equal(got["params"]["w"], _state(1)["params"]["w"])
+
+
+def test_straggler_monitor_detects():
+    mon = StragglerMonitor(window=16, threshold=1.5, persist=2)
+    ev = None
+    for i in range(12):
+        mon.start_step()
+        time.sleep(0.02 if i < 10 else 0.08)
+        ev = mon.end_step(i) or ev
+    assert ev is not None and ev.action in ("rebalance", "checkpoint")
+    assert 0.5 <= mon.rebalance_fraction(0) <= 1.0
+
+
+def test_elastic_plan_node_loss():
+    # lose 9 chips out of 256: keep model=16, shrink data
+    plan = plan_remesh(247, model=16, target_global_batch=256,
+                       per_replica_batch=16)
+    assert plan.model == 16
+    assert plan.n_chips <= 247
+    assert plan.data * plan.pods == plan.n_chips // 16
+    # global batch preserved via accumulation
+    assert plan.grad_accum * plan.data * plan.pods * 16 >= 256
+
+
+def test_elastic_plan_too_few_chips():
+    with pytest.raises(ValueError):
+        plan_remesh(8, model=16)

@@ -1,0 +1,76 @@
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import init_ssm, ssd_forward, ssd_decode
+
+
+def test_moe_matches_dense_reference():
+    """With capacity >= all assignments, sort-based dispatch must equal the
+    explicit per-token expert mixture."""
+    cfg = dataclasses.replace(smoke_config("dbrx-132b"), moe_experts=4,
+                              moe_top_k=2, d_model=32, d_ff=64)
+    p, _ = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, size=(24, 32)), jnp.float32)
+    got = moe_ffn(p, x, cfg, capacity_factor=4.0)   # no drops
+    # dense reference
+    logits = np.asarray(x) @ np.asarray(p["router"])
+    topi = np.argsort(-logits, axis=-1)[:, :2]
+    topv = np.take_along_axis(logits, topi, axis=-1)
+    gates = jax.nn.softmax(jnp.asarray(topv), axis=-1)
+    ref = np.zeros((24, 32), np.float32)
+    for t in range(24):
+        for j in range(2):
+            e = int(topi[t, j])
+            h = np.asarray(x[t]) @ np.asarray(p["w_gate"][e])
+            u = np.asarray(x[t]) @ np.asarray(p["w_up"][e])
+            y = (np.asarray(jax.nn.silu(jnp.asarray(h))) * u) @ \
+                np.asarray(p["w_down"][e])
+            ref[t] += float(gates[t, j]) * y
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(smoke_config("dbrx-132b"), moe_experts=4,
+                              moe_top_k=1, d_model=16, d_ff=32)
+    p, _ = init_moe(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = jnp.ones((16, 16), jnp.float32)             # all route identically
+    out = moe_ffn(p, x, cfg, capacity_factor=0.25)  # capacity 1
+    nonzero = (np.abs(np.asarray(out)).sum(axis=1) > 1e-9).sum()
+    assert nonzero <= 2                             # everything else dropped
+
+
+def _ssm_naive(p, x, cfg):
+    """Sequential per-token recurrence oracle for SSD."""
+    out = []
+    Bsz = x.shape[0]
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    state = jnp.zeros((Bsz, H, cfg.ssm_state, cfg.ssm_headdim), jnp.float32)
+    ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    conv = jnp.zeros((Bsz, cfg.ssm_conv - 1, ch), x.dtype)
+    for t in range(x.shape[1]):
+        y, state, conv = ssd_decode(p, x[:, t:t + 1], state, conv, cfg)
+        out.append(y)
+    return jnp.concatenate(out, axis=1), state
+
+
+def test_ssd_chunked_matches_sequential():
+    cfg = smoke_config("mamba2-130m")
+    p, _ = init_ssm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 0.5, size=(2, 16, cfg.d_model)),
+                    jnp.float32)
+    y_chunk, st_chunk, _ = ssd_forward(p, x, cfg, chunk=8)
+    y_seq, st_seq = _ssm_naive(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    # final states must agree (prefill -> decode handoff correctness);
+    # note axis conventions: chunked returns (B,H,N,P)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st_seq),
+                               rtol=2e-3, atol=2e-3)

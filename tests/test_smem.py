@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core import fmindex as fmx
+from repro.core import smem as sm
+from repro.core.fmindex import occ_base_v, occ_opt_v
+from repro.data import make_reference, simulate_reads
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ref = make_reference(12000, seed=5)
+    idx = fmx.build_index(ref)
+    reads, _ = simulate_reads(ref, 24, 101, seed=2)
+    return idx, reads
+
+
+def test_smem1_matches_definition(setup):
+    idx, reads = setup
+    for r in range(8):
+        q = reads[r]
+        brute = sm.brute_smems(idx, q)
+        got = []
+        x = 0
+        while x < len(q):
+            if q[x] < 4:
+                ms, x = sm.smem1(idx, q, x, 1)
+                got.extend((m[3], m[4]) for m in ms)
+            else:
+                x += 1
+        assert sorted(set(got)) == brute
+
+
+def test_smem_interval_sizes_are_occurrence_counts(setup):
+    idx, reads = setup
+    text = idx.seq.tobytes()
+    q = reads[0]
+    ms, _ = sm.smem1(idx, q, 40, 1)
+    for (k, l, s, qb, qe) in ms:
+        sub = q[qb:qe].tobytes()
+        cnt = start = 0
+        while True:
+            p = text.find(sub, start)
+            if p < 0:
+                break
+            cnt += 1
+            start = p + 1
+        assert cnt == s
+
+
+def test_batched_identical_to_oracle_both_layouts(setup):
+    idx, reads = setup
+    opt = sm.MemOptions()
+    lens = np.full(len(reads), reads.shape[1], np.int64)
+    oracle = [sm.collect_smems(idx, reads[r], opt)
+              for r in range(len(reads))]
+    for occ_fn in (occ_opt_v, occ_base_v):
+        got = sm.collect_smems_batch(idx, reads, lens, opt, occ_fn=occ_fn)
+        assert got == oracle
+
+
+def test_reads_with_ambiguous_bases(setup):
+    idx, _ = setup
+    rng = np.random.default_rng(9)
+    reads = rng.integers(0, 4, size=(6, 80)).astype(np.uint8)
+    reads[:, ::17] = 4                    # plant Ns
+    opt = sm.MemOptions()
+    lens = np.full(6, 80, np.int64)
+    oracle = [sm.collect_smems(idx, reads[r], opt) for r in range(6)]
+    got = sm.collect_smems_batch(idx, reads, lens, opt)
+    assert got == oracle
