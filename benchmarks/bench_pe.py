@@ -1,0 +1,66 @@
+"""Paired-end mate rescue: scalar baseline vs batched inter-task dispatch.
+
+The rescue fan-out is another BSW workload (§5.3.1 applied to mem_matesw):
+each rescued mate contributes left/right extension tasks that the batched
+driver pools across the whole batch, length-sorts and runs through the
+vectorized executor.  This reports scalar vs batched rescue throughput
+plus the cell-utilisation accounting, alongside an end-to-end PE row.
+"""
+
+from __future__ import annotations
+
+from .common import timeit
+
+import numpy as np  # noqa: E402
+
+from repro.core import fmindex as fmx  # noqa: E402
+from repro.core.pipeline import (PipelineOptions,  # noqa: E402
+                                 align_pairs_optimized,
+                                 align_reads_optimized)
+from repro.data import make_reference, simulate_pairs  # noqa: E402
+from repro.pe import (PEOptions, estimate_pestat, plan_rescues,  # noqa: E402
+                      run_rescues_batched, run_rescues_scalar)
+
+REF_N = 150_000
+N_PAIRS = 192
+READ_LEN = 101
+
+
+def run() -> None:
+    ref = make_reference(REF_N, seed=42)
+    idx = fmx.build_index(ref)
+    r1, r2, _ = simulate_pairs(ref, N_PAIRS, READ_LEN, insert_mean=300,
+                               insert_std=30, seed=9, burst_frac=0.5)
+    n = len(r1)
+    res, _ = align_reads_optimized(idx, np.concatenate([r1, r2]))
+    res1, res2 = res[:n], res[n:]
+    S, l_pac = idx.seq, idx.n_ref
+    opt = PipelineOptions()
+    pes = estimate_pestat(res1, res2, l_pac)
+    tasks = plan_rescues((res1, res2), (r1, r2), pes, l_pac,
+                         PEOptions(), S)
+    print(f"pe_rescue_tasks,{len(tasks)},")
+
+    box = {}
+
+    def _batched():
+        _, box["stats"] = run_rescues_batched(tasks, S, l_pac, opt.bsw)
+
+    t_scalar = timeit(lambda: run_rescues_scalar(tasks, S, l_pac, opt.bsw))
+    t_batched = timeit(_batched)
+    st = box["stats"]
+    print(f"pe_rescue_scalar_s,{t_scalar:.4f},")
+    print(f"pe_rescue_batched_s,{t_batched:.4f},"
+          f"{len(tasks) / t_batched:.1f} tasks/s")
+    print(f"pe_rescue_speedup,{t_scalar / t_batched:.2f},batched vs scalar")
+    if st.get("rescue_cells_total"):
+        util = st["rescue_cells_useful"] / st["rescue_cells_total"]
+        print(f"pe_rescue_cell_util,{util:.3f},useful/computed DP cells")
+
+    t_e2e = timeit(lambda: align_pairs_optimized(idx, r1, r2), repeat=1,
+                   warmup=1)
+    print(f"pe_e2e_optimized_s,{t_e2e:.2f},{N_PAIRS / t_e2e:.1f} pairs/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -13,17 +13,18 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling")
+    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe")
     args = ap.parse_args()
     picks = set(args.only.split(","))
     from . import bench_smem, bench_sal, bench_bsw, bench_e2e, \
-        bench_scaling
+        bench_scaling, bench_pe
     suites = {
         "smem": ("Table 4 (SMEM kernel)", bench_smem.run),
         "sal": ("Table 5 (SAL kernel)", bench_sal.run),
         "bsw": ("Tables 6-8 (BSW kernel)", bench_bsw.run),
         "e2e": ("Figure 5 (end-to-end)", bench_e2e.run),
         "scaling": ("Figure 4 (scaling)", bench_scaling.run),
+        "pe": ("PE mate rescue (scalar vs batched)", bench_pe.run),
     }
     print("name,value,derived")
     for key, (title, fn) in suites.items():

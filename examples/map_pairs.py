@@ -1,0 +1,55 @@
+"""Paired-end read-mapping demo: the full mem_sam_pe-style flow.
+
+Simulates FR pairs (including "burst" mates that SMEM seeding cannot
+place), aligns both ends stage-major, estimates the insert-size
+distribution, rescues unmapped mates through the batched BSW executor and
+emits pair-aware SAM (proper-pair flags, RNEXT/PNEXT/TLEN).
+
+  PYTHONPATH=src python examples/map_pairs.py [n_pairs]
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+from repro.core import build_index
+from repro.core.pipeline import align_pairs_optimized
+from repro.data import make_reference, simulate_pairs
+
+n_pairs = int(sys.argv[1]) if len(sys.argv) > 1 else 128
+print("building index over 200k-base reference ...")
+ref = make_reference(200_000, seed=3)
+t0 = time.time()
+idx = build_index(ref)
+print(f"  index built in {time.time()-t0:.1f}s (N={idx.N})")
+reads1, reads2, truth = simulate_pairs(ref, n_pairs, 151, insert_mean=350,
+                                       insert_std=35, seed=4,
+                                       burst_frac=0.1)
+
+t0 = time.time()
+lines, stats = align_pairs_optimized(idx, reads1, reads2)
+t_total = time.time() - t0
+print(f"aligned {n_pairs} pairs in {t_total:.2f}s "
+      f"({n_pairs / t_total:.1f} pairs/s)")
+print(f"insert-size estimate (FR): avg={stats['pes_avg'][1]:.1f} "
+      f"std={stats['pes_std'][1]:.1f} (simulated 350/35)")
+print(f"mate rescue: {stats['rescue_tasks']} tasks -> "
+      f"{stats['n_rescued']} mates rescued")
+print(f"proper pairs: {stats['n_proper']}/{n_pairs}")
+
+# truth recovery: both ends at the simulated loci
+ok = 0
+for pid in range(n_pairs):
+    f1 = lines[2 * pid].split("\t")
+    f2 = lines[2 * pid + 1].split("\t")
+    if int(f1[1]) & 0x4 or int(f2[1]) & 0x4:
+        continue
+    if (abs(int(f1[3]) - 1 - truth["pos1"][pid]) <= 12 and
+            abs(int(f2[3]) - 1 - truth["pos2"][pid]) <= 12):
+        ok += 1
+print(f"both ends at simulated locus: {ok}/{n_pairs}")
+print("\nfirst two pairs:")
+for ln in lines[:4]:
+    print(" ", ln)

@@ -1,7 +1,10 @@
-"""End-to-end read-mapping driver over a larger synthetic dataset, with
-per-stage timing (the paper's Table 1 breakdown).
+"""End-to-end SINGLE-END read-mapping driver over a larger synthetic
+dataset, with per-stage timing (the paper's Table 1 breakdown).
 
   PYTHONPATH=src python examples/map_reads.py [n_reads]
+
+For the paired-end flow (insert-size estimation, mate rescue, proper-pair
+SAM) see examples/map_pairs.py.
 """
 import pathlib
 import sys

@@ -2,4 +2,5 @@ from .fmindex import FMIndex, FMArrays, build_index  # noqa: F401
 from .smem import MemOptions, collect_smems, collect_smems_batch  # noqa: F401
 from .bsw import BSWParams, bsw_extend, bsw_extend_batch  # noqa: F401
 from .pipeline import (PipelineOptions, align_reads_baseline,  # noqa: F401
-                       align_reads_optimized, to_sam)
+                       align_reads_optimized, align_pairs_baseline,
+                       align_pairs_optimized, to_sam)

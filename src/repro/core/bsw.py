@@ -357,6 +357,54 @@ def bsw_extend_batch(queries: list[np.ndarray], targets: list[np.ndarray],
     return [ExtResult(*(int(v) for v in out[:, i])) for i in range(W)]
 
 
+def bsw_extend_tasks(queries, targets, h0s, p: BSWParams,
+                     ws=None, *, block: int = 256, sort: bool = True,
+                     pad: int = 32):
+    """Batched driver for an ARBITRARY extension-task list (paper §5.3.1).
+
+    The inter-task entry point shared by the pipeline's BSW stage and the
+    paired-end mate-rescue fan-out: tasks are length-sorted, cut into
+    lockstep blocks of ``block`` lanes, padded to a multiple of ``pad``
+    and dispatched through ``bsw_extend_batch``.  Empty-query/target tasks
+    short-circuit to the no-op result (ksw_extend is never called with
+    empty sequences in bwa).
+
+    Returns (results in INPUT order, stats) where stats carries the
+    Table-8-style useful/computed cell accounting.
+    """
+    n = len(queries)
+    results: list = [None] * n
+    stats = dict(tasks=0, cells_useful=0, cells_total=0)
+    live = []
+    for i in range(n):
+        if len(queries[i]) == 0 or len(targets[i]) == 0:
+            results[i] = ExtResult(h0s[i], 0, 0, 0, -1, 0)
+        else:
+            live.append(i)
+    if not live:
+        return results, stats
+    qlens = np.array([len(queries[i]) for i in live])
+    tlens = np.array([len(targets[i]) for i in live])
+    order = sort_tasks_by_length(qlens, tlens) if sort \
+        else np.arange(len(live))
+    for s in range(0, len(live), block):
+        idxs = [live[j] for j in order[s:s + block]]
+        qs = [queries[i] for i in idxs]
+        ts = [targets[i] for i in idxs]
+        h0b = [h0s[i] for i in idxs]
+        wsb = None if ws is None else [ws[i] for i in idxs]
+        qmax = -(-max(len(q) for q in qs) // pad) * pad
+        tmax = -(-max(len(t) for t in ts) // pad) * pad
+        res = bsw_extend_batch(qs, ts, h0b, p, ws=wsb, qmax=qmax, tmax=tmax)
+        for i, r in zip(idxs, res):
+            results[i] = r
+        stats["tasks"] += len(idxs)
+        stats["cells_useful"] += int((np.array([len(q) for q in qs]) *
+                                      np.array([len(t) for t in ts])).sum())
+        stats["cells_total"] += qmax * tmax * len(idxs)
+    return results, stats
+
+
 def sort_tasks_by_length(qlens: np.ndarray, tlens: np.ndarray) -> np.ndarray:
     """Paper §5.3.1: sort tasks by length so same-block lanes are uniform.
 

@@ -28,8 +28,7 @@ import numpy as np
 
 from . import smem as smem_mod
 from . import sal as sal_mod
-from .bsw import BSWParams, ExtResult, bsw_extend, bsw_extend_batch, \
-    sort_tasks_by_length
+from .bsw import BSWParams, ExtResult, bsw_extend, bsw_extend_tasks
 from .chain import Chain, ChainOptions, chain_seeds, filter_chains
 from .fmindex import FMIndex, occ_opt_np, occ_opt_v, occ_base_v
 from .sam import global_align_cigar, format_sam
@@ -46,6 +45,7 @@ class Alignment:
     seedcov: int; seedlen0: int
     sub: int = 0; csub: int = 0
     secondary: int = -1
+    rescued: bool = False     # placed by PE mate rescue, not by seeding
     # filled by finalize():
     pos: int = -1; is_rev: bool = False; mapq: int = 0
     cigar: list = dataclasses.field(default_factory=list)
@@ -219,33 +219,18 @@ class BatchedBSWExecutor:
 
     def _run(self, tasks: dict):
         """tasks: key -> (q, t, h0, w). Executes batched, fills self.table."""
-        keys = [k for k, v in tasks.items()
-                if len(v[0]) > 0 and len(v[1]) > 0]
-        for k, v in tasks.items():
-            if len(v[0]) == 0 or len(v[1]) == 0:
-                self.table[k] = ExtResult(v[2], 0, 0, 0, -1, 0)
+        keys = list(tasks.keys())
         if not keys:
             return
-        qlens = np.array([len(tasks[k][0]) for k in keys])
-        tlens = np.array([len(tasks[k][1]) for k in keys])
-        order = sort_tasks_by_length(qlens, tlens) if self.sort \
-            else np.arange(len(keys))
-        for s in range(0, len(keys), self.block):
-            blk = [keys[i] for i in order[s:s + self.block]]
-            qs = [tasks[k][0] for k in blk]
-            ts = [tasks[k][1] for k in blk]
-            h0s = [tasks[k][2] for k in blk]
-            ws = [tasks[k][3] for k in blk]
-            qmax = -(-max(len(q) for q in qs) // 32) * 32
-            tmax = -(-max(len(t) for t in ts) // 32) * 32
-            res = bsw_extend_batch(qs, ts, h0s, self.p, ws=ws,
-                                   qmax=qmax, tmax=tmax)
-            for k, r in zip(blk, res):
-                self.table[k] = r
-            self.stats["tasks"] += len(blk)
-            self.stats["cells_useful"] += int((np.array([len(q) for q in qs]) *
-                                               np.array([len(t) for t in ts])).sum())
-            self.stats["cells_total"] += qmax * tmax * len(blk)
+        res, st = bsw_extend_tasks([tasks[k][0] for k in keys],
+                                   [tasks[k][1] for k in keys],
+                                   [tasks[k][2] for k in keys], self.p,
+                                   ws=[tasks[k][3] for k in keys],
+                                   block=self.block, sort=self.sort)
+        for k, r in zip(keys, res):
+            self.table[k] = r
+        for name in self.stats:
+            self.stats[name] += st[name]
 
     def plan_and_run(self, jobs):
         """jobs: list of (job_id, chain, query, S, l_pac).
@@ -507,6 +492,44 @@ def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
                  cells_useful=execu.stats["cells_useful"],
                  cells_total=execu.stats["cells_total"])
     return results, stats
+
+
+def align_pairs_baseline(idx: FMIndex, reads1: np.ndarray,
+                         reads2: np.ndarray,
+                         opt: PipelineOptions = PipelineOptions(),
+                         pe_opt=None, names=None):
+    """Paired-end baseline: per-read scalar SE alignment of both ends,
+    then insert-size estimation, SCALAR mate rescue and pair-aware SAM
+    emission.  Returns (sam_lines, stats)."""
+    from ..pe import pair_pipeline   # deferred: repro.pe imports this module
+    res1, s1 = align_reads_baseline(idx, reads1, opt)
+    res2, s2 = align_reads_baseline(idx, reads2, opt)
+    lines, pstats = pair_pipeline(idx, reads1, reads2, res1, res2, opt,
+                                  pe_opt, batched=False, names=names)
+    stats = {k: s1[k] + s2[k] for k in s1}
+    stats.update(pstats)
+    return lines, stats
+
+
+def align_pairs_optimized(idx: FMIndex, reads1: np.ndarray,
+                          reads2: np.ndarray,
+                          opt: PipelineOptions = PipelineOptions(),
+                          pe_opt=None, names=None):
+    """Paired-end optimized driver (paper's organisation extended to PE):
+    stage-major batched SE alignment over BOTH ends at once, then the
+    whole batch's mate-rescue extensions pooled through the length-sorted
+    BSW executor.  Output is byte-identical to ``align_pairs_baseline``
+    (tested)."""
+    from ..pe import pair_pipeline   # deferred: repro.pe imports this module
+    n = len(reads1)
+    both = np.concatenate([reads1, reads2], axis=0)
+    res, s = align_reads_optimized(idx, both, opt)
+    res1, res2 = res[:n], res[n:]
+    lines, pstats = pair_pipeline(idx, reads1, reads2, res1, res2, opt,
+                                  pe_opt, batched=True, names=names)
+    stats = dict(s)
+    stats.update(pstats)
+    return lines, stats
 
 
 def to_sam(reads: np.ndarray, results, names=None) -> list[str]:

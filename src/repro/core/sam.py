@@ -88,13 +88,8 @@ def global_align_cigar(q: np.ndarray, t: np.ndarray, w: int,
     return int(H[n, m]), cigar
 
 
-def format_sam(qname: str, read: np.ndarray, aln, n_ref: int) -> str:
-    """One SAM line from an Alignment record (see pipeline.py)."""
-    if aln is None:
-        return f"{qname}\t4\t*\t0\t0\t*\t*\t0\t0\t*\t*"
-    flag = 16 if aln.is_rev else 0
-    if aln.secondary >= 0:
-        flag |= 256
+def _cigar_str(read: np.ndarray, aln) -> str:
+    """CIGAR with soft clips from the alignment's query interval."""
     cig = ""
     if aln.qb > 0:
         cig += f"{aln.qb}S"
@@ -102,5 +97,63 @@ def format_sam(qname: str, read: np.ndarray, aln, n_ref: int) -> str:
     tail = len(read) - aln.qe
     if tail > 0:
         cig += f"{tail}S"
+    return cig
+
+
+def cigar_reflen(aln) -> int:
+    """Reference bases consumed by the alignment (M/D ops)."""
+    return sum(n for n, op in aln.cigar if op in ("M", "D"))
+
+
+def format_sam(qname: str, read: np.ndarray, aln, n_ref: int) -> str:
+    """One SAM line from an Alignment record (see pipeline.py)."""
+    if aln is None:
+        return f"{qname}\t4\t*\t0\t0\t*\t*\t0\t0\t*\t*"
+    flag = 16 if aln.is_rev else 0
+    if aln.secondary >= 0:
+        flag |= 256
+    cig = _cigar_str(read, aln)
     return (f"{qname}\t{flag}\tref\t{aln.pos + 1}\t{aln.mapq}\t{cig}\t*\t0\t0"
             f"\t*\t*\tAS:i:{aln.score}\tNM:i:{aln.nm}")
+
+
+def format_sam_pe(qname: str, read: np.ndarray, aln, mate, *,
+                  first: bool, proper: bool) -> str:
+    """One end of a read pair: FLAG bits 0x1/0x2/0x8/0x20/0x40/0x80 plus
+    RNEXT/PNEXT/TLEN (bwa mem_aln2sam's mate fields).
+
+    TLEN follows bwa exactly: signed distance between the two ends'
+    leftmost/rightmost reference coordinates, ``-(p0 - p1 + sign)`` with
+    p = pos (+ reflen - 1 on the reverse strand).
+    """
+    flag = 0x1 | (0x40 if first else 0x80)
+    if aln is None:
+        flag |= 0x4
+        if mate is not None:
+            if mate.is_rev:
+                flag |= 0x20
+            # SAM convention: an unmapped end takes its mate's coordinate
+            return (f"{qname}\t{flag}\tref\t{mate.pos + 1}\t0\t*\t="
+                    f"\t{mate.pos + 1}\t0\t*\t*")
+        flag |= 0x8
+        return f"{qname}\t{flag}\t*\t0\t0\t*\t*\t0\t0\t*\t*"
+    if aln.is_rev:
+        flag |= 0x10
+    if proper:
+        flag |= 0x2
+    if mate is None:
+        flag |= 0x8
+        rnext, pnext, tlen = "=", aln.pos + 1, 0
+    else:
+        if mate.is_rev:
+            flag |= 0x20
+        rnext, pnext = "=", mate.pos + 1
+        p0 = aln.pos + (cigar_reflen(aln) - 1 if aln.is_rev else 0)
+        p1 = mate.pos + (cigar_reflen(mate) - 1 if mate.is_rev else 0)
+        tlen = -(p0 - p1 + (1 if p0 > p1 else -1 if p0 < p1 else 0))
+    cig = _cigar_str(read, aln)
+    tags = f"AS:i:{aln.score}\tNM:i:{aln.nm}"
+    if getattr(aln, "rescued", False):
+        tags += "\tXR:i:1"
+    return (f"{qname}\t{flag}\tref\t{aln.pos + 1}\t{aln.mapq}\t{cig}"
+            f"\t{rnext}\t{pnext}\t{tlen}\t*\t*\t{tags}")

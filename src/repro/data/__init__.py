@@ -1,1 +1,2 @@
-from .reads import make_reference, simulate_reads, encode, decode  # noqa: F401
+from .reads import (make_reference, simulate_reads, simulate_pairs,  # noqa: F401
+                    encode, decode, revcomp_read)

@@ -33,6 +33,13 @@ def decode(codes: np.ndarray) -> str:
     return out.astype(np.uint8).tobytes().decode()
 
 
+def revcomp_read(read: np.ndarray) -> np.ndarray:
+    """Reverse-complement keeping ambiguous bases (N=4) as N."""
+    out = (3 - read)[::-1].astype(np.uint8)
+    out[out > 3] = 4
+    return out
+
+
 def make_reference(n: int, *, seed: int = 0, repeat_frac: float = 0.3,
                    repeat_len: int = 200) -> np.ndarray:
     """Random genome with planted repeats.
@@ -94,8 +101,67 @@ def simulate_reads(ref: np.ndarray, n_reads: int, read_len: int, *,
         amb = rng.random(read_len) < n_rate
         read[amb] = 4
         if is_rev[r]:
-            read = (3 - read)[::-1]
-            read[read > 3] = 4  # keep N as N after complement
+            read = revcomp_read(read)
         reads[r] = read
     truth = {"pos": pos, "is_rev": is_rev}
     return reads, truth
+
+
+def simulate_pairs(ref: np.ndarray, n_pairs: int, read_len: int, *,
+                   insert_mean: float = 300.0, insert_std: float = 30.0,
+                   seed: int = 1, snp_rate: float = 0.01,
+                   n_rate: float = 0.001, flip_frac: float = 0.5,
+                   burst_frac: float = 0.0, burst_period: int = 12):
+    """FR paired-end simulator (Illumina-style innies).
+
+    A fragment of length ``isize ~ N(insert_mean, insert_std)`` is sampled
+    from the forward strand; read1 is its left end read forward and read2
+    its right end read reverse-complemented (FR orientation).  With
+    probability ``flip_frac`` the fragment is sequenced from the other
+    strand (read1 becomes the reverse-complemented right end), which keeps
+    the orientation FR but exercises both flag layouts.
+
+    ``burst_frac`` pairs get a *rescue-only* mate: read2's source carries a
+    SNP every ``burst_period`` bases, so no exact seed reaches the default
+    SMEM ``min_seed_len`` (19) and the end-to-end pipeline leaves the mate
+    unmapped — only the insert-size-window mate rescue can place it.
+
+    Returns (reads1, reads2, truth) where truth holds per-pair arrays:
+    ``pos`` (fragment start), ``isize``, ``pos1``/``pos2`` (forward-strand
+    starts per end), ``rev1``/``rev2`` (strand per end), ``burst``.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(ref)
+    L = read_len
+    isize = np.round(rng.normal(insert_mean, insert_std,
+                                n_pairs)).astype(np.int64)
+    isize = np.clip(isize, L + 2, n - 2)
+    pos = rng.integers(0, n - isize)
+    flip = rng.random(n_pairs) < flip_frac
+    burst = rng.random(n_pairs) < burst_frac
+    reads1 = np.empty((n_pairs, L), np.uint8)
+    reads2 = np.empty((n_pairs, L), np.uint8)
+    pos1 = np.where(flip, pos + isize - L, pos)
+    pos2 = np.where(flip, pos, pos + isize - L)
+    rev1, rev2 = flip, ~flip
+
+    def _mutate(read):
+        snp = rng.random(L) < snp_rate
+        read[snp] = (read[snp] + rng.integers(1, 4, size=int(snp.sum()))) % 4
+        amb = rng.random(L) < n_rate
+        read[amb] = 4
+        return read
+
+    for i in range(n_pairs):
+        r1 = _mutate(ref[pos1[i]:pos1[i] + L].copy())
+        r2 = ref[pos2[i]:pos2[i] + L].copy()
+        if burst[i]:
+            at = np.arange(burst_period // 2, L, burst_period)
+            r2[at] = (r2[at] + rng.integers(1, 4, size=len(at))) % 4
+        else:
+            r2 = _mutate(r2)
+        reads1[i] = revcomp_read(r1) if rev1[i] else r1
+        reads2[i] = revcomp_read(r2) if rev2[i] else r2
+    truth = {"pos": pos, "isize": isize, "pos1": pos1, "pos2": pos2,
+             "rev1": rev1, "rev2": rev2, "burst": burst}
+    return reads1, reads2, truth

@@ -1,0 +1,91 @@
+"""Runtime side of the distribution layer: an ambient mesh + option flags.
+
+Model code never imports a mesh directly.  It calls ``constrain(x, ...)``
+with LOGICAL axis names ("batch", "model", None); when a mesh has been
+activated (``with mesh, active_mesh(mesh):``) the call lowers to
+``jax.lax.with_sharding_constraint``, otherwise it is a no-op — which is
+what lets the same model run on a single CPU device in the unit tests and
+on a 16x16 pod slice in the dry-run without touching model code.
+
+Options ("seq_parallel", "moe_ep", "moe_gather_w", "moe_groups", "dp_all")
+are the hillclimb levers: scoped, thread-local flags read by model code via
+``get_option`` so a variant sweep never threads config through every call.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _opts() -> dict:
+    if not hasattr(_STATE, "options"):
+        _STATE.options = {}
+    return _STATE.options
+
+
+def get_option(name: str, default=None):
+    """Current value of a distribution option (None when unset)."""
+    return _opts().get(name, default)
+
+
+@contextlib.contextmanager
+def options(**kw):
+    """Scoped option overrides (nestable; restores previous values)."""
+    prev = dict(_opts())
+    _opts().update(kw)
+    try:
+        yield
+    finally:
+        _STATE.options = prev
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def active_mesh(mesh):
+    """Make ``mesh`` the ambient mesh for ``constrain`` calls."""
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def batch_mesh_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is sharded over.  Normally the pure-DP
+    axes; with the ``dp_all`` option every mesh axis acts data-parallel."""
+    if get_option("dp_all"):
+        return tuple(mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, *axes):
+    """Sharding constraint by logical axis name per array dim.
+
+    ``"batch"`` maps to the mesh's data-parallel axes, a mesh axis name
+    maps to itself, ``None`` leaves the dim unconstrained.  No-op without
+    an active mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for a in axes:
+        if a == "batch":
+            ba = batch_mesh_axes(mesh)
+            spec.append(ba if ba else None)
+        elif a is not None and a in mesh.axis_names:
+            spec.append(a)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

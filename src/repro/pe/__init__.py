@@ -1,0 +1,60 @@
+"""Paired-end alignment subsystem (bwa-mem's mem_sam_pe path).
+
+Stages, all sharing code between the baseline and optimized drivers so
+output stays byte-identical:
+
+1. insert-size estimation from high-confidence unique pairs (pestat.py);
+2. mate rescue — insert-window banded SW for unmapped/inconsistent mates,
+   scalar per-pair baseline vs. length-sorted inter-task batches through
+   the Pallas-backed BSW executor (rescue.py);
+3. pair scoring/selection and pair-aware SAM emission with proper-pair
+   FLAG/RNEXT/PNEXT/TLEN fields (pairing.py).
+
+Entry points live on the pipeline: ``align_pairs_baseline`` /
+``align_pairs_optimized`` in ``repro.core.pipeline``.
+"""
+
+from .pestat import PairStat, estimate_pestat, infer_dir  # noqa: F401
+from .rescue import (PEOptions, RescueTask, best_diag_seed,  # noqa: F401
+                     merge_rescues, plan_rescues, rescue_window,
+                     run_rescues_batched, run_rescues_scalar)
+from .pairing import emit_pair, pair_score, select_pair  # noqa: F401
+
+
+def pair_pipeline(idx, reads1, reads2, res1, res2, opt, peopt=None, *,
+                  batched: bool, names=None):
+    """Shared PE tail: pestat -> rescue (scalar or batched) -> pairing ->
+    SAM.  ``res1``/``res2`` are the per-end alignment lists from the SE
+    stage and are extended IN PLACE with rescued alignments.
+
+    Returns (sam_lines, stats).
+    """
+    peopt = peopt or PEOptions()
+    S, l_pac = idx.seq, idx.n_ref
+    p = opt.bsw
+    pes = estimate_pestat(res1, res2, l_pac, max_ins=peopt.max_ins)
+    tasks = plan_rescues((res1, res2), (reads1, reads2), pes, l_pac,
+                         peopt, S)
+    if batched:
+        outs, rstats = run_rescues_batched(tasks, S, l_pac, p,
+                                           block=opt.bsw_block,
+                                           sort=opt.bsw_sort)
+    else:
+        outs, rstats = run_rescues_scalar(tasks, S, l_pac, p)
+    n_rescued = merge_rescues((res1, res2), tasks, outs, S, l_pac, p,
+                              opt.mem.min_seed_len, peopt)
+    lines: list[str] = []
+    n_proper = 0
+    for pid in range(len(reads1)):
+        qname = names[pid] if names else f"pair{pid}"
+        two, proper = emit_pair(qname, reads1[pid], reads2[pid],
+                                res1[pid], res2[pid], pes, l_pac,
+                                p.a, peopt.pen_unpaired)
+        lines.extend(two)
+        n_proper += int(proper)
+    stats = dict(rstats)
+    stats.update(n_rescued=n_rescued, n_proper=n_proper,
+                 pes_failed=[s.failed for s in pes],
+                 pes_avg=[s.avg for s in pes],
+                 pes_std=[s.std for s in pes])
+    return lines, stats

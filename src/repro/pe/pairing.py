@@ -1,0 +1,78 @@
+"""Pair scoring and selection (mem_pair port) + pair-aware SAM emission.
+
+A candidate pair (one alignment per end) is scored as the sum of the two
+alignment scores plus an insert-size log-likelihood penalty under the
+estimated distribution:
+
+    q = s1 + s2 + 0.721 * ln(2 * erfc(|ns| / sqrt(2))) * a
+
+where ``ns`` is the insert size's z-score for the pair's orientation
+(0.721 = 1/ln(4) converts nats to the scoring-matrix scale, as in bwa).
+The best-scoring consistent pair wins the pairing only if it beats the
+unpaired alternative ``best1 + best2 - pen_unpaired``; otherwise each end
+keeps its own best alignment and the pair is not marked proper.
+"""
+
+from __future__ import annotations
+
+import math
+
+from ..core.sam import format_sam_pe
+from .pestat import PairStat, infer_dir
+
+_M_SQRT1_2 = 1.0 / math.sqrt(2.0)
+MAX_PAIR_CAND = 8
+
+
+def pair_score(a1, a2, pes: list[PairStat], l_pac: int, a_match: int):
+    """(q, r, dist) if the two alignments form a consistent pair under a
+    non-failed orientation, else None."""
+    r, d = infer_dir(l_pac, a1.rb, a2.rb)
+    if pes[r].failed or not (pes[r].low <= d <= pes[r].high):
+        return None
+    ns = (d - pes[r].avg) / pes[r].std
+    prob = max(2.0 * math.erfc(abs(ns) * _M_SQRT1_2), 1e-300)
+    q = a1.score + a2.score + 0.721 * math.log(prob) * a_match
+    return int(q + 0.499), r, d
+
+
+def select_pair(regs1: list, regs2: list, pes: list[PairStat], l_pac: int,
+                a_match: int):
+    """Best consistent (i, j, q) over non-secondary candidates of both
+    ends, or None.  Strict-greater acceptance in index order keeps ties
+    deterministic (lowest i, then lowest j)."""
+    c1 = [a for a in regs1 if a.secondary < 0][:MAX_PAIR_CAND]
+    c2 = [a for a in regs2 if a.secondary < 0][:MAX_PAIR_CAND]
+    best = None
+    for i, a1 in enumerate(c1):
+        for j, a2 in enumerate(c2):
+            s = pair_score(a1, a2, pes, l_pac, a_match)
+            if s is None:
+                continue
+            if best is None or s[0] > best[2]:
+                best = (a1, a2, s[0])
+    return best
+
+
+def emit_pair(qname: str, read1, read2, regs1: list, regs2: list,
+              pes: list[PairStat], l_pac: int, a_match: int,
+              pen_unpaired: int) -> tuple[list[str], bool]:
+    """Two SAM lines for one pair + whether it was emitted proper.
+
+    mem_sam_pe's decision: take the best consistent pair when its score
+    beats the unpaired sum minus the unpaired penalty; fall back to each
+    end's own best alignment otherwise.
+    """
+    b1 = regs1[0] if regs1 else None
+    b2 = regs2[0] if regs2 else None
+    a1, a2, proper = b1, b2, False
+    if not all(s.failed for s in pes):
+        sel = select_pair(regs1, regs2, pes, l_pac, a_match)
+        if sel is not None:
+            score_un = ((b1.score if b1 else 0) + (b2.score if b2 else 0)
+                        - pen_unpaired)
+            if sel[2] > score_un:
+                a1, a2, proper = sel[0], sel[1], True
+    lines = [format_sam_pe(qname, read1, a1, a2, first=True, proper=proper),
+             format_sam_pe(qname, read2, a2, a1, first=False, proper=proper)]
+    return lines, proper

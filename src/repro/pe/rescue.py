@@ -1,0 +1,227 @@
+"""Mate rescue (mem_matesw port) — scalar baseline + batched driver.
+
+When one mate is unmapped (or has no alignment consistent with the
+estimated insert-size distribution), bwa scans the window implied by its
+partner's position and the per-orientation insert bounds and runs SW
+against the reference there.  This module implements that twice with
+IDENTICAL output:
+
+* ``run_rescues_scalar`` — per-task, the scalar ksw_extend oracle
+  executed inline (mirrors the baseline pipeline's read-major shape);
+* ``run_rescues_batched`` — the paper's inter-task organisation (§5.3.1):
+  every left/right extension of every rescue task across the WHOLE batch
+  is collected, length-sorted and dispatched through the existing
+  ``bsw_extend_tasks``/Pallas-backed executor, then the per-task decision
+  logic is replayed from the result table.
+
+Task construction is shared: the mate read (as-is, never re-complemented
+— the doubled reference's reverse half covers the opposite strand) is
+anchored by its longest exact diagonal match inside the rescue window,
+and the anchor seed is extended left/right exactly like a one-seed chain
+through ``chain2aln``, so rescue output obeys the same extension spec as
+the main pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.bsw import BSWParams
+from ..core.chain import Chain
+from ..core.pipeline import (BatchedBSWExecutor, _bsw_immediate, chain2aln,
+                             approx_mapq, finalize_alignment)
+from .pestat import PairStat, infer_dir
+
+
+@dataclasses.dataclass
+class RescueTask:
+    pair_id: int
+    end: int                  # which end is being rescued (0 or 1)
+    r: int                    # orientation being attempted
+    chain: Chain              # single anchor seed inside the window
+    query: np.ndarray         # the mate read, as-is
+
+
+def best_diag_seed(q: np.ndarray, S: np.ndarray, wlo: int, whi: int,
+                   min_len: int):
+    """Longest exact diagonal match of ``q`` starting inside S[wlo:whi).
+
+    Vectorized run-length scan over all diagonals: returns (rb, qb, len)
+    in reference coordinates, or None when no run reaches ``min_len``.
+    Ambiguous bases (>=4) never match.  Ties break toward the smallest
+    diagonal, then the leftmost run (deterministic for both drivers).
+    """
+    L = len(q)
+    n = whi - wlo
+    if n < min_len or L < min_len:
+        return None
+    W = np.full(n + L, 5, np.uint8)
+    W[:n] = S[wlo:whi]
+    diag = np.lib.stride_tricks.sliding_window_view(W, L)[:n]   # (n, L)
+    eq = (diag == q[None, :]) & (q[None, :] < 4)
+    jj = np.arange(L)
+    last_miss = np.maximum.accumulate(np.where(~eq, jj, -1), axis=1)
+    runlen = np.where(eq, jj - last_miss, 0)                    # (n, L)
+    best = int(runlen.max())
+    if best < min_len:
+        return None
+    d, j_end = np.unravel_index(int(runlen.argmax()), runlen.shape)
+    qb = int(j_end) - best + 1
+    return (wlo + int(d) + qb, qb, best)
+
+
+def rescue_window(l_pac: int, b1: int, r: int, pes_r: PairStat,
+                  l_ms: int) -> tuple[int, int] | None:
+    """Reference window [wlo, whi) that may contain the mate's start rb.
+
+    Solves ``infer_dir(l_pac, b1, rb) == (r, dist)`` for ``dist`` in
+    [low, high], widened by the mate length, then clamped to a single
+    strand half of the doubled reference (rescue never crosses the
+    forward/reverse boundary, like _chain_rmax).
+    """
+    low, high = pes_r.low, pes_r.high
+    if r == 0:                       # same strand, mate downstream
+        lo, hi = b1 + low, b1 + high
+    elif r == 3:                     # same strand, mate upstream
+        lo, hi = b1 - high, b1 - low
+    elif r == 1:                     # opposite strand, mate downstream
+        lo, hi = 2 * l_pac - 1 - (b1 + high), 2 * l_pac - 1 - (b1 + low)
+    else:                            # r == 2: opposite strand, upstream
+        lo, hi = 2 * l_pac - 1 - b1 + low, 2 * l_pac - 1 - b1 + high
+    wlo, whi = lo - l_ms, hi + l_ms
+    same = r in (0, 3)
+    anchor_rev = b1 >= l_pac
+    target_rev = anchor_rev if same else not anchor_rev
+    half_lo, half_hi = (l_pac, 2 * l_pac) if target_rev else (0, l_pac)
+    wlo, whi = max(wlo, half_lo), min(whi, half_hi)
+    if whi <= wlo:
+        return None
+    return int(wlo), int(whi)
+
+
+@dataclasses.dataclass(frozen=True)
+class PEOptions:
+    """Paired-end knobs (bwa-mem defaults where they exist)."""
+    max_ins: int = 10000
+    pen_unpaired: int = 17
+    max_matesw: int = 2              # rescue anchors per end (bwa: 50)
+    rescue_min_seed: int = 10        # window anchor seed (< SMEM's 19)
+    min_score: int = 30              # emission threshold (bwa -T)
+
+
+def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],
+                 l_pac: int, peopt: PEOptions,
+                 S: np.ndarray) -> list[RescueTask]:
+    """mem_sam_pe's rescue fan-out, planned from the PRE-rescue state.
+
+    For each end's strong alignments (score within pen_unpaired of the
+    best, capped at max_matesw), attempt every non-failed orientation for
+    which the OTHER end has no consistent alignment yet.  Planning from a
+    snapshot (unlike bwa's accumulate-as-you-go) makes the task list — and
+    therefore the output — independent of execution order, which is what
+    lets the scalar and batched drivers be byte-identical.
+    """
+    tasks: list[RescueTask] = []
+    n_pairs = len(results[0])
+    for pid in range(n_pairs):
+        regs = (results[0][pid], results[1][pid])
+        for i in (0, 1):
+            if not regs[i]:
+                continue
+            other = 1 - i
+            best = regs[i][0].score
+            anchors = [a for a in regs[i]
+                       if a.secondary < 0
+                       and a.score >= best - peopt.pen_unpaired]
+            anchors = anchors[:peopt.max_matesw]
+            mate = reads[other][pid]
+            for a in anchors:
+                # orientations already satisfied by a mate alignment
+                # consistent with THIS anchor (mem_matesw's skip[], which
+                # re-evaluates per call)
+                skip = [pes[r].failed for r in range(4)]
+                for m in regs[other]:
+                    r, d = infer_dir(l_pac, a.rb, m.rb)
+                    if not pes[r].failed and pes[r].low <= d <= pes[r].high:
+                        skip[r] = True
+                for r in range(4):
+                    if skip[r]:
+                        continue
+                    win = rescue_window(l_pac, a.rb, r, pes[r], len(mate))
+                    if win is None:
+                        continue
+                    seed = best_diag_seed(mate, S, win[0], win[1],
+                                          peopt.rescue_min_seed)
+                    if seed is None:
+                        continue
+                    tasks.append(RescueTask(pair_id=pid, end=other, r=r,
+                                            chain=Chain(seeds=[seed]),
+                                            query=mate))
+    return tasks
+
+
+def run_rescues_scalar(tasks: list[RescueTask], S: np.ndarray, l_pac: int,
+                       p: BSWParams):
+    """Baseline: each rescue extension runs the scalar oracle inline."""
+    fn = _bsw_immediate(p)
+    n_ext = [0]
+
+    def counting(side, seed_id, rnd, q, t, h0, w):
+        # count only real extensions, matching the batched executor's
+        # stats (empty-sequence tasks short-circuit in both drivers)
+        if len(q) > 0 and len(t) > 0:
+            n_ext[0] += 1
+        return fn(side, seed_id, rnd, q, t, h0, w)
+
+    outs = [chain2aln(t.chain, t.query, S, l_pac, p, counting)
+            for t in tasks]
+    return outs, dict(rescue_tasks=len(tasks), rescue_bsw=n_ext[0])
+
+
+def run_rescues_batched(tasks: list[RescueTask], S: np.ndarray, l_pac: int,
+                        p: BSWParams, *, block: int = 256,
+                        sort: bool = True):
+    """Optimized: all rescue extensions across the batch pooled,
+    length-sorted and dispatched through the batched BSW executor, then
+    decisions replayed per task — same structure as the main pipeline's
+    Stage 4."""
+    execu = BatchedBSWExecutor(p, block=block, sort=sort)
+    execu.plan_and_run([(ti, t.chain, t.query, S, l_pac)
+                        for ti, t in enumerate(tasks)])
+    outs = [chain2aln(t.chain, t.query, S, l_pac, p, execu.executor(ti))
+            for ti, t in enumerate(tasks)]
+    return outs, dict(rescue_tasks=len(tasks),
+                      rescue_bsw=execu.stats["tasks"],
+                      rescue_cells_useful=execu.stats["cells_useful"],
+                      rescue_cells_total=execu.stats["cells_total"])
+
+
+def merge_rescues(results: tuple, tasks: list[RescueTask], outs: list,
+                  S: np.ndarray, l_pac: int, p: BSWParams,
+                  min_seed_len: int, peopt: PEOptions) -> int:
+    """Fold rescue alignments into the per-end lists (shared by both
+    drivers; task order is deterministic, so so is the merge).
+
+    Keeps bwa's acceptance gates: score at least min_seed_len matches and
+    the emission threshold; duplicate regions (two anchors rescuing the
+    same placement) are dropped.  Returns the number of accepted rescues.
+    """
+    n_ok = 0
+    for t, alns in zip(tasks, outs):
+        for a in alns:
+            if a.score < min_seed_len * p.a or a.truesc < peopt.min_score:
+                continue
+            regs = results[t.end][t.pair_id]
+            # dedup on reference coords only: finalize flips qb/qe into
+            # SAM read coords for reverse hits, so query coords are not
+            # comparable between pre- and post-finalize records
+            if any(x.rb == a.rb and x.re == a.re for x in regs):
+                continue
+            finalize_alignment(a, t.query, S, l_pac, p)
+            a.mapq = approx_mapq(a, p, min_seed_len)
+            a.rescued = True
+            regs.append(a)
+            n_ok += 1
+    return n_ok

@@ -1,7 +1,12 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # degrade gracefully: property tests skip
+    HAVE_HYPOTHESIS = False
 
 from repro.core import fmindex as fmx
 from repro.data import make_reference
@@ -110,27 +115,32 @@ def test_vectorized_extension(idx):
                 assert (int(fk[j]), int(fl[j])) == (e[0], e[1])
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.integers(40, 300))
-def test_property_random_reference(seed, n):
-    """Index invariants on arbitrary references (hypothesis)."""
-    rng = np.random.default_rng(seed)
-    ref = rng.integers(0, 4, size=n, dtype=np.uint8)
-    idx = fmx.build_index(ref)
-    # C counts are consistent with the sequence
-    S = idx.seq
-    counts = np.bincount(S, minlength=4)
-    assert idx.C[0] == 1
-    for c in range(1, 4):
-        assert idx.C[c] - idx.C[c - 1] == counts[c - 1]
-    # occ at the end counts everything
-    for c in range(4):
-        assert idx.occ(c, idx.N - 1) == counts[c]
-    # SAL identity on a sample of rows
-    rs = rng.integers(0, idx.N, size=16)
-    for i in rs:
-        v, _ = idx.sa_lookup_compressed(int(i))
-        assert v == idx.sa_lookup(int(i))
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(40, 300))
+    def test_property_random_reference(seed, n):
+        """Index invariants on arbitrary references (hypothesis)."""
+        rng = np.random.default_rng(seed)
+        ref = rng.integers(0, 4, size=n, dtype=np.uint8)
+        idx = fmx.build_index(ref)
+        # C counts are consistent with the sequence
+        S = idx.seq
+        counts = np.bincount(S, minlength=4)
+        assert idx.C[0] == 1
+        for c in range(1, 4):
+            assert idx.C[c] - idx.C[c - 1] == counts[c - 1]
+        # occ at the end counts everything
+        for c in range(4):
+            assert idx.occ(c, idx.N - 1) == counts[c]
+        # SAL identity on a sample of rows
+        rs = rng.integers(0, idx.N, size=16)
+        for i in rs:
+            v, _ = idx.sa_lookup_compressed(int(i))
+            assert v == idx.sa_lookup(int(i))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_random_reference():
+        pass
 
 
 def test_revcomp_involution():

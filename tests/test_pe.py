@@ -1,0 +1,167 @@
+"""Paired-end subsystem tests: insert-size estimation, scalar-vs-batched
+mate rescue identity, and proper-pair FLAG/TLEN round-trips — including
+the acceptance bar that ``align_pairs_baseline`` and
+``align_pairs_optimized`` emit byte-identical SAM on 256+ simulated pairs
+with rescued and unpaired reads in the mix."""
+
+import numpy as np
+import pytest
+
+from repro.core import fmindex as fmx
+from repro.core.pipeline import (PipelineOptions, align_pairs_baseline,
+                                 align_pairs_optimized,
+                                 align_reads_optimized)
+from repro.data import make_reference, simulate_pairs
+from repro.pe import (PEOptions, estimate_pestat, infer_dir, plan_rescues,
+                      run_rescues_batched, run_rescues_scalar)
+
+N_PAIRS = 256
+MEAN, STD, L = 250.0, 25.0, 101
+
+
+@pytest.fixture(scope="module")
+def world():
+    ref = make_reference(50_000, seed=7, repeat_frac=0.2)
+    return ref, fmx.build_index(ref)
+
+
+@pytest.fixture(scope="module")
+def pairs(world):
+    ref, _ = world
+    return simulate_pairs(ref, N_PAIRS, L, insert_mean=MEAN, insert_std=STD,
+                          seed=5, burst_frac=0.15)
+
+
+@pytest.fixture(scope="module")
+def aligned(world, pairs):
+    """Both PE drivers over the full 256-pair batch."""
+    _, idx = world
+    r1, r2, _ = pairs
+    base_lines, base_stats = align_pairs_baseline(idx, r1, r2)
+    opt_lines, opt_stats = align_pairs_optimized(idx, r1, r2)
+    return base_lines, base_stats, opt_lines, opt_stats
+
+
+def _fields(line):
+    f = line.split("\t")
+    return dict(qname=f[0], flag=int(f[1]), rname=f[2], pos=int(f[3]),
+                mapq=int(f[4]), cigar=f[5], rnext=f[6], pnext=int(f[7]),
+                tlen=int(f[8]), tags=f[11:])
+
+
+def test_identical_output_256_pairs(aligned):
+    base_lines, _, opt_lines, _ = aligned
+    assert len(base_lines) == 2 * N_PAIRS
+    assert base_lines == opt_lines
+
+
+def test_rescues_and_unpaired_present(aligned):
+    """The acceptance batch must actually exercise the interesting paths:
+    rescued mates and reads left unpaired/unmapped."""
+    _, stats, lines, _ = aligned
+    assert stats["rescue_tasks"] > 0
+    assert stats["n_rescued"] > 0
+    assert any("XR:i:1" in ln for ln in lines)
+    assert any(_fields(ln)["flag"] & 0x4 for ln in lines)      # unmapped
+    assert any(not _fields(ln)["flag"] & 0x2 for ln in lines)  # not proper
+
+
+def test_pestat_recovers_simulator(aligned):
+    """FR orientation (r=1) estimated from unique pairs must match the
+    simulator's insert distribution within sampling tolerance."""
+    _, stats, _, _ = aligned
+    assert stats["pes_failed"][1] is False
+    assert abs(stats["pes_avg"][1] - MEAN) < 3 * STD / 2
+    assert 0.4 * STD < stats["pes_std"][1] < 1.8 * STD
+
+
+def test_infer_dir_fr_geometry():
+    """An FR innie maps to orientation r=1 at distance isize-1 in the
+    doubled coordinate space, from either anchor end."""
+    l_pac, p, isize = 10_000, 2_000, 300
+    b1 = p                                   # read1 forward
+    b2 = 2 * l_pac - p - isize               # read2 as-is on reverse half
+    assert infer_dir(l_pac, b1, b2) == (1, isize - 1)
+    assert infer_dir(l_pac, b2, b1) == (1, isize - 1)
+
+
+def test_batched_rescue_identical_to_scalar(world):
+    """Same rescue task list through the scalar oracle and the
+    length-sorted batched executor -> identical alignments."""
+    ref, idx = world
+    r1, r2, _ = simulate_pairs(ref, 96, L, insert_mean=MEAN,
+                               insert_std=STD, seed=11, burst_frac=0.4)
+    n = len(r1)
+    res, _ = align_reads_optimized(idx, np.concatenate([r1, r2]))
+    res1, res2 = res[:n], res[n:]
+    S, l_pac = idx.seq, idx.n_ref
+    opt = PipelineOptions()
+    pes = estimate_pestat(res1, res2, l_pac)
+    tasks = plan_rescues((res1, res2), (r1, r2), pes, l_pac,
+                         PEOptions(), S)
+    assert len(tasks) >= 10
+    outs_s, _ = run_rescues_scalar(tasks, S, l_pac, opt.bsw)
+    outs_b, _ = run_rescues_batched(tasks, S, l_pac, opt.bsw)
+    assert outs_s == outs_b
+
+
+def test_proper_pair_flags_and_tlen_roundtrip(aligned, pairs):
+    base_lines, _, _, _ = aligned
+    _, _, truth = pairs
+    n_proper = 0
+    for pid in range(N_PAIRS):
+        e1 = _fields(base_lines[2 * pid])
+        e2 = _fields(base_lines[2 * pid + 1])
+        assert e1["qname"] == e2["qname"] == f"pair{pid}"
+        assert e1["flag"] & 0x1 and e2["flag"] & 0x1
+        assert (e1["flag"] & 0x40) and (e2["flag"] & 0x80)
+        assert bool(e1["flag"] & 0x2) == bool(e2["flag"] & 0x2)
+        if e1["flag"] & 0x4 or e2["flag"] & 0x4:
+            continue
+        # mate fields cross-reference each other
+        assert e1["pnext"] == e2["pos"] and e2["pnext"] == e1["pos"]
+        assert bool(e1["flag"] & 0x20) == bool(e2["flag"] & 0x10)
+        assert bool(e2["flag"] & 0x20) == bool(e1["flag"] & 0x10)
+        if e1["flag"] & 0x2:
+            n_proper += 1
+            # proper FR pair: TLEN symmetric and near the simulated insert
+            assert e1["tlen"] == -e2["tlen"] != 0
+            assert abs(abs(e1["tlen"]) - truth["isize"][pid]) <= 40
+            assert bool(e1["flag"] & 0x10) != bool(e2["flag"] & 0x10)
+    assert n_proper >= N_PAIRS * 0.6
+
+
+def test_unmapped_mate_rescued(world, pairs, aligned):
+    """Burst mates are invisible to SMEM seeding (no exact seed >= 19)
+    but must come back via insert-window rescue at the simulated locus."""
+    ref, idx = world
+    r1, r2, truth = pairs
+    base_lines, _, _, _ = aligned
+    burst = np.where(truth["burst"])[0]
+    assert len(burst) >= 10
+    # SE-only: burst mates do not align
+    se, _ = align_reads_optimized(idx, r2[burst])
+    assert sum(1 for alns in se if not alns) >= 0.9 * len(burst)
+    rescued_ok = 0
+    for pid in burst:
+        e2 = _fields(base_lines[2 * pid + 1])
+        if e2["flag"] & 0x4 or "XR:i:1" not in "\t".join(e2["tags"]):
+            continue
+        if abs(e2["pos"] - 1 - truth["pos2"][pid]) <= 12:
+            rescued_ok += 1
+    assert rescued_ok >= 0.5 * len(burst)
+
+
+def test_pestat_failure_fallback(world):
+    """Too few pairs to estimate an insert distribution: every orientation
+    fails, nothing is rescued or marked proper, output stays well-formed."""
+    ref, idx = world
+    r1, r2, _ = simulate_pairs(ref, 6, L, insert_mean=MEAN, insert_std=STD,
+                               seed=13)
+    lines, stats = align_pairs_optimized(idx, r1, r2)
+    assert stats["pes_failed"] == [True, True, True, True]
+    assert stats["rescue_tasks"] == 0 and stats["n_proper"] == 0
+    assert len(lines) == 12
+    for ln in lines:
+        f = _fields(ln)
+        assert f["flag"] & 0x1 and not f["flag"] & 0x2
