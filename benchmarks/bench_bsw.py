@@ -9,16 +9,17 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import get_world, timeit, row
+from .common import get_world, scaled, timeit, row
 from repro.core.bsw import (BSWParams, bsw_extend, bsw_extend_batch,
                             sort_tasks_by_length, wasted_cell_stats)
 from repro.core.pipeline import BatchedBSWExecutor, PipelineOptions, \
     align_reads_optimized
 
 
-def intercept_tasks(idx, reads, n_reads=96):
+def intercept_tasks(idx, reads, n_reads=None):
     """Run SMEM->SAL->CHAIN and collect every BSW task the extension stage
     plans (query, target, h0)."""
+    n_reads = n_reads or scaled(96, 24)
     opt = PipelineOptions()
     captured = []
     orig = BatchedBSWExecutor._run
@@ -49,7 +50,7 @@ def run():
     row("bsw.n_tasks", n, "intercepted from the pipeline (paper method)")
 
     # scalar baseline (original BWA-MEM organisation)
-    sub = min(n, 256)
+    sub = min(n, scaled(256, 128))
     t_scalar = timeit(lambda: [bsw_extend(qs[i], ts[i], h0[i], p, ws[i])
                                for i in range(sub)], repeat=1) * (n / sub)
 

@@ -5,13 +5,14 @@ from __future__ import annotations
 
 import time
 
-from .common import get_world, row
+from .common import get_world, row, scaled
 from repro.core.pipeline import (align_reads_baseline,
                                  align_reads_optimized, to_sam)
 
 
-def run(n_reads: int = 64):
+def run(n_reads: int | None = None):
     idx, reads, _ = get_world()
+    n_reads = n_reads or scaled(64, 16)
     reads = reads[:n_reads]
 
     t0 = time.perf_counter()

@@ -9,7 +9,7 @@ plus the cell-utilisation accounting, alongside an end-to-end PE row.
 
 from __future__ import annotations
 
-from .common import timeit
+from .common import row, timeit
 
 import numpy as np  # noqa: E402
 
@@ -21,8 +21,10 @@ from repro.data import make_reference, simulate_pairs  # noqa: E402
 from repro.pe import (PEOptions, estimate_pestat, plan_rescues,  # noqa: E402
                       run_rescues_batched, run_rescues_scalar)
 
-REF_N = 150_000
-N_PAIRS = 192
+from .common import scaled  # noqa: E402
+
+REF_N = scaled(150_000, 50_000)
+N_PAIRS = scaled(192, 64)
 READ_LEN = 101
 
 
@@ -34,32 +36,31 @@ def run() -> None:
     n = len(r1)
     res, _ = align_reads_optimized(idx, np.concatenate([r1, r2]))
     res1, res2 = res[:n], res[n:]
-    S, l_pac = idx.seq, idx.n_ref
     opt = PipelineOptions()
-    pes = estimate_pestat(res1, res2, l_pac)
-    tasks = plan_rescues((res1, res2), (r1, r2), pes, l_pac,
-                         PEOptions(), S)
-    print(f"pe_rescue_tasks,{len(tasks)},")
+    pes = estimate_pestat(res1, res2, idx)
+    tasks = plan_rescues((res1, res2), (r1, r2), pes, idx, PEOptions())
+    row("pe_rescue_tasks", len(tasks))
 
     box = {}
 
     def _batched():
-        _, box["stats"] = run_rescues_batched(tasks, S, l_pac, opt.bsw)
+        _, box["stats"] = run_rescues_batched(tasks, idx, opt.bsw)
 
-    t_scalar = timeit(lambda: run_rescues_scalar(tasks, S, l_pac, opt.bsw))
+    t_scalar = timeit(lambda: run_rescues_scalar(tasks, idx, opt.bsw))
     t_batched = timeit(_batched)
     st = box["stats"]
-    print(f"pe_rescue_scalar_s,{t_scalar:.4f},")
-    print(f"pe_rescue_batched_s,{t_batched:.4f},"
-          f"{len(tasks) / t_batched:.1f} tasks/s")
-    print(f"pe_rescue_speedup,{t_scalar / t_batched:.2f},batched vs scalar")
+    row("pe_rescue_scalar_s", f"{t_scalar:.4f}")
+    row("pe_rescue_batched_s", f"{t_batched:.4f}",
+        f"{len(tasks) / t_batched:.1f} tasks/s")
+    row("pe_rescue_speedup", f"{t_scalar / t_batched:.2f}",
+        "batched vs scalar")
     if st.get("rescue_cells_total"):
         util = st["rescue_cells_useful"] / st["rescue_cells_total"]
-        print(f"pe_rescue_cell_util,{util:.3f},useful/computed DP cells")
+        row("pe_rescue_cell_util", f"{util:.3f}", "useful/computed DP cells")
 
     t_e2e = timeit(lambda: align_pairs_optimized(idx, r1, r2), repeat=1,
                    warmup=1)
-    print(f"pe_e2e_optimized_s,{t_e2e:.2f},{N_PAIRS / t_e2e:.1f} pairs/s")
+    row("pe_e2e_optimized_s", f"{t_e2e:.2f}", f"{N_PAIRS / t_e2e:.1f} pairs/s")
 
 
 if __name__ == "__main__":

@@ -8,11 +8,12 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .common import get_world, timeit, row
+from .common import get_world, scaled, timeit, row
 from repro.core.sal import sal_compressed, sal_direct
 
 
-def run(n_lookups: int = 200_000):
+def run(n_lookups: int | None = None):
+    n_lookups = n_lookups or scaled(200_000, 20_000)
     idx, _, _ = get_world()
     fm = idx.device()
     rng = np.random.default_rng(0)

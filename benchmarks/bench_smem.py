@@ -10,15 +10,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import get_world, timeit, row
+from .common import get_world, scaled, timeit, row
 from repro.core import smem as sm
 from repro.core.fmindex import occ_base_np, occ_opt_np
 from repro.core.smem import MemOptions
 
 
-def run(n_reads: int = 192):
+def run(n_reads: int | None = None):
     idx, reads, _ = get_world()
-    reads = reads[:n_reads]
+    reads = reads[:n_reads or scaled(192, 48)]
     lens = np.full(len(reads), reads.shape[1], np.int64)
     opt = MemOptions()
 
@@ -32,7 +32,7 @@ def run(n_reads: int = 192):
     # "no batching" baseline = IDENTICAL code at batch width 1 (the paper's
     # §4.3 per-query processing); isolates the batching/prefetch-analogue
     # gain from any implementation-language effects.
-    sub = 24
+    sub = scaled(24, 8)
     t_width1 = timeit(
         lambda: [sm.collect_smems_batch(idx, reads[r:r + 1], lens[:1], opt,
                                         occ_fn=occ_opt_np)

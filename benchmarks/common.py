@@ -4,6 +4,7 @@ repeat-rich reference, Table 3 analogue)."""
 
 from __future__ import annotations
 
+import os
 import pathlib
 import pickle
 import sys
@@ -18,10 +19,24 @@ import numpy as np  # noqa: E402
 from repro.core import fmindex as fmx  # noqa: E402
 from repro.data import make_reference, simulate_reads  # noqa: E402
 
+# CI smoke mode (benchmarks/run.py --ci): tiny sizes so the whole suite
+# records a per-PR perf trajectory in minutes, not hours.
+CI = os.environ.get("REPRO_BENCH_CI") == "1"
+
+
+def scaled(full: int, ci: int) -> int:
+    """Pick the CI-sized value of a benchmark knob in --ci mode."""
+    return ci if CI else full
+
+
 CACHE = pathlib.Path("/tmp/repro_bench_cache")
-REF_N = 300_000
-N_READS = 512
+REF_N = scaled(300_000, 60_000)
+N_READS = scaled(512, 96)
 READ_LEN = 101
+
+# every row() call lands here too, so run.py --json can dump the whole
+# suite as one machine-readable artifact (BENCH_ci.json in CI)
+ROWS: list[dict] = []
 
 
 def get_world(ref_n: int = REF_N, n_reads: int = N_READS,
@@ -52,4 +67,5 @@ def timeit(fn, *, repeat: int = 3, warmup: int = 1):
 
 
 def row(name: str, value, derived=""):
+    ROWS.append({"name": name, "value": value, "derived": derived})
     print(f"{name},{value},{derived}", flush=True)

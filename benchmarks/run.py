@@ -2,11 +2,19 @@
 
 Prints ``name,value,derived`` CSV rows.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only smem,sal,bsw,e2e,scaling]
+
+``--ci`` shrinks every suite to CI-smoke sizes; ``--json PATH`` writes
+all rows (plus per-suite wall time) as JSON — the CI bench-smoke job
+uploads that file as the ``BENCH_ci.json`` artifact so the repo's perf
+trajectory is recorded per-PR.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
 import time
 
@@ -14,9 +22,16 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI-smoke sizes for every suite")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as JSON to PATH")
     args = ap.parse_args()
+    if args.ci:
+        # must precede the bench imports: common.py reads it at import
+        os.environ["REPRO_BENCH_CI"] = "1"
     picks = set(args.only.split(","))
-    from . import bench_smem, bench_sal, bench_bsw, bench_e2e, \
+    from . import common, bench_smem, bench_sal, bench_bsw, bench_e2e, \
         bench_scaling, bench_pe
     suites = {
         "smem": ("Table 4 (SMEM kernel)", bench_smem.run),
@@ -27,13 +42,26 @@ def main() -> None:
         "pe": ("PE mate rescue (scalar vs batched)", bench_pe.run),
     }
     print("name,value,derived")
+    suite_s = {}
     for key, (title, fn) in suites.items():
         if key not in picks:
             continue
         print(f"# --- {title} ---", flush=True)
         t0 = time.time()
         fn()
-        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+        suite_s[key] = round(time.time() - t0, 1)
+        print(f"# {key} done in {suite_s[key]:.1f}s", flush=True)
+    if args.json:
+        payload = {
+            "ci_mode": args.ci,
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+            "suites_s": suite_s,
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

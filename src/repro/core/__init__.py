@@ -1,4 +1,6 @@
 from .fmindex import FMIndex, FMArrays, build_index  # noqa: F401
+from .contig import (ContigIndex, build_contig_index, contig_id,  # noqa: F401
+                     same_contig, sam_header, translate)
 from .smem import MemOptions, collect_smems, collect_smems_batch  # noqa: F401
 from .bsw import BSWParams, bsw_extend, bsw_extend_batch  # noqa: F401
 from .pipeline import (PipelineOptions, align_reads_baseline,  # noqa: F401

@@ -13,6 +13,11 @@ import dataclasses
 import numpy as np
 
 
+def _block_of(edges: np.ndarray, pos: int) -> int:
+    """Index of the contig block (see core.contig) containing ``pos``."""
+    return int(np.searchsorted(edges, pos, side="right"))
+
+
 @dataclasses.dataclass(frozen=True)
 class ChainOptions:
     w: int = 100                 # band width used in the merge test
@@ -42,7 +47,8 @@ class Chain:
         return self.seeds[0][0]
 
 
-def _test_and_merge(opt: ChainOptions, l_pac: int, c: Chain, seed) -> bool:
+def _test_and_merge(opt: ChainOptions, l_pac: int, c: Chain, seed,
+                    edges=None) -> bool:
     """bwa test_and_merge: True if seed merged (or contained) into chain c."""
     rbeg, qbeg, slen = seed
     last = c.seeds[-1]
@@ -54,6 +60,9 @@ def _test_and_merge(opt: ChainOptions, l_pac: int, c: Chain, seed) -> bool:
         return True                               # contained: drop silently
     if (first[0] < l_pac or last[0] < l_pac) and rbeg >= l_pac:
         return False                              # different strands
+    if edges is not None and _block_of(edges, rbeg) != _block_of(edges,
+                                                                 last[0]):
+        return False                              # different contig blocks
     x = qbeg - last[1]
     y = rbeg - last[0]
     if (y >= 0 and x - y <= opt.w and y - x <= opt.w and
@@ -84,11 +93,14 @@ def chain_weight(c: Chain) -> int:
     return min(w_q, w_r)
 
 
-def chain_seeds(seeds, l_pac: int, opt: ChainOptions) -> list[Chain]:
+def chain_seeds(seeds, l_pac: int, opt: ChainOptions,
+                edges=None) -> list[Chain]:
     """seeds: list of (rbeg, qbeg, len) sorted by (qbeg, ...) insertion order
     as produced by the SAL stage (bwa inserts in interval order).  We sort
     by (qbeg, rbeg, len) for determinism, then chain greedily against the
-    chain with the largest rbeg <= seed.rbeg (bwa's kbtree lower-bound)."""
+    chain with the largest rbeg <= seed.rbeg (bwa's kbtree lower-bound).
+    ``edges`` (core.contig block boundaries) keeps chains from spanning
+    contigs; for a single contig it is equivalent to the strand test."""
     chains: list[Chain] = []
     for seed in sorted(seeds, key=lambda s: (s[1], s[0], s[2])):
         lower = None
@@ -96,7 +108,8 @@ def chain_seeds(seeds, l_pac: int, opt: ChainOptions) -> list[Chain]:
         for c in chains:
             if c.rbeg <= seed[0] and c.rbeg > best_pos:
                 lower, best_pos = c, c.rbeg
-        if lower is None or not _test_and_merge(opt, l_pac, lower, seed):
+        if lower is None or not _test_and_merge(opt, l_pac, lower, seed,
+                                                edges):
             chains.append(Chain(seeds=[seed]))
     for c in chains:
         c.weight = chain_weight(c)

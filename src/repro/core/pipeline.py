@@ -21,6 +21,7 @@ output.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Callable
 
@@ -30,6 +31,7 @@ from . import smem as smem_mod
 from . import sal as sal_mod
 from .bsw import BSWParams, ExtResult, bsw_extend, bsw_extend_tasks
 from .chain import Chain, ChainOptions, chain_seeds, filter_chains
+from .contig import block_bounds, contig_edges
 from .fmindex import FMIndex, occ_opt_np, occ_opt_v, occ_base_v
 from .sam import global_align_cigar, format_sam
 from .smem import MemOptions
@@ -59,22 +61,20 @@ def cal_max_gap(p: BSWParams, qlen: int, w: int) -> int:
     return min(l, w << 1)
 
 
-def _chain_rmax(chain: Chain, l_query: int, l_pac: int, p: BSWParams,
+def _chain_rmax(chain: Chain, l_query: int, idx: FMIndex, p: BSWParams,
                 w: int) -> tuple[int, int]:
+    """Reference window a chain's extensions may touch, clamped to the
+    contig block of the chain's first seed (for one contig: the strand
+    half, exactly bwa's fwd/rev-boundary clamp)."""
+    l_pac = idx.n_ref
     r0, r1 = l_pac << 1, 0
     for (rb, qb, ln) in chain.seeds:
         b = rb - (qb + cal_max_gap(p, qb, w))
         e = rb + ln + ((l_query - qb - ln) + cal_max_gap(p, l_query - qb - ln, w))
         r0 = min(r0, b)
         r1 = max(r1, e)
-    r0 = max(r0, 0)
-    r1 = min(r1, l_pac << 1)
-    if r0 < l_pac < r1:          # crossing the fwd/rev boundary: pick one side
-        if chain.seeds[0][0] < l_pac:
-            r1 = l_pac
-        else:
-            r0 = l_pac
-    return r0, r1
+    lo, hi = block_bounds(idx, chain.seeds[0][0])
+    return max(r0, lo), min(r1, hi)
 
 
 def _seed_order(chain: Chain) -> list[int]:
@@ -84,13 +84,14 @@ def _seed_order(chain: Chain) -> list[int]:
     return order[::-1]
 
 
-def chain2aln(chain: Chain, query: np.ndarray, S: np.ndarray, l_pac: int,
+def chain2aln(chain: Chain, query: np.ndarray, idx: FMIndex,
               p: BSWParams, bsw_fn: Callable) -> list[Alignment]:
     """Port of mem_chain2aln.  ``bsw_fn(side, seed_id, rnd, q, t, h0, w)``
     returns an ExtResult; the executor argument is what lets the optimized
     pipeline substitute precomputed batched extensions."""
+    S = idx.seq
     l_query = len(query)
-    rmax0, rmax1 = _chain_rmax(chain, l_query, l_pac, p, p.w)
+    rmax0, rmax1 = _chain_rmax(chain, l_query, idx, p, p.w)
     rseq = S[rmax0:rmax1]
     out: list[Alignment] = []
     order = _seed_order(chain)
@@ -233,7 +234,7 @@ class BatchedBSWExecutor:
             self.stats[name] += st[name]
 
     def plan_and_run(self, jobs):
-        """jobs: list of (job_id, chain, query, S, l_pac).
+        """jobs: list of (job_id, chain, query, idx).
 
         Phase 1: left round-0 for every non-skippable seed... note the
         containment skip depends on ALREADY-EXTENDED alignments, which the
@@ -245,8 +246,9 @@ class BatchedBSWExecutor:
         # ---- wave L0: all left extensions, round 0 ----
         Ltasks = {}
         meta = {}
-        for (jid, chain, query, S, l_pac) in jobs:
-            rmax0, rmax1 = _chain_rmax(chain, len(query), l_pac, p, p.w)
+        for (jid, chain, query, idx) in jobs:
+            S = idx.seq
+            rmax0, rmax1 = _chain_rmax(chain, len(query), idx, p, p.w)
             meta[jid] = (rmax0, rmax1)
             for k, (rb_s, qb_s, ln_s) in enumerate(chain.seeds):
                 if qb_s > 0:
@@ -263,9 +265,9 @@ class BatchedBSWExecutor:
         self._run(L1)
         # ---- wave R0: rights, h0 from the seed's own left outcome ----
         Rtasks = {}
-        for (jid, chain, query, S, l_pac) in jobs:
+        for (jid, chain, query, idx) in jobs:
             rmax0, rmax1 = meta[jid]
-            rseq = S[rmax0:rmax1]
+            rseq = idx.seq[rmax0:rmax1]
             l_query = len(query)
             for k, (rb_s, qb_s, ln_s) in enumerate(chain.seeds):
                 sc0 = self._left_score(jid, k, qb_s, ln_s)
@@ -419,6 +421,8 @@ def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
     eta=128 occ. Returns (list per read of Alignment, stats)."""
     S = idx.seq
     l_pac = idx.n_ref
+    edges = contig_edges(idx)
+    elist = edges.tolist()          # scalar bisect beats np in this loop
     stats = dict(sa_lookups=0, bsw_tasks=0)
     bsw_fn_factory = _bsw_immediate(opt.bsw)
     results = []
@@ -435,11 +439,15 @@ def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
                 rbeg, _ = idx.sa_lookup_compressed(k + kk)
                 stats["sa_lookups"] += 1
                 slen = qe - qb
-                if not (rbeg < l_pac < rbeg + slen):
+                # same-block test (bwa's boundary-bridging seed drop; the
+                # scalar form of core.contig.seed_within_contig)
+                if bisect.bisect_right(elist, rbeg) == \
+                        bisect.bisect_right(elist, rbeg + slen - 1):
                     seeds.append((int(rbeg), qb, slen))
                 kk += step
                 cnt += 1
-        chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain), opt.chain)
+        chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain, edges),
+                               opt.chain)
         alns: list[Alignment] = []
         counting = [0]
         def counting_fn(side, seed_id, rnd, qq, tt, h0, w,
@@ -447,7 +455,7 @@ def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
             _c[0] += 1
             return _f(side, seed_id, rnd, qq, tt, h0, w)
         for c in chains:
-            alns.extend(chain2aln(c, q, S, l_pac, opt.bsw, counting_fn))
+            alns.extend(chain2aln(c, q, idx, opt.bsw, counting_fn))
         stats["bsw_tasks"] += counting[0]
         results.append(mark_and_finalize(alns, q, S, l_pac, opt.bsw,
                                          opt.mem.min_seed_len))
@@ -459,6 +467,7 @@ def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
     """Paper's organisation (Fig 2 right): stage-major over the batch."""
     S = idx.seq
     l_pac = idx.n_ref
+    edges = contig_edges(idx)
     R, L = reads.shape
     lens = np.full(R, L, np.int64)
     # Stage 1: batched SMEM (optimized eta=32 occ; numpy backend on CPU)
@@ -472,10 +481,11 @@ def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
     jobs = []
     for r in range(R):
         seeds = [(rb, qb, ln) for (rb, qb, ln, s) in seeds_per_read[r]]
-        chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain), opt.chain)
+        chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain, edges),
+                               opt.chain)
         chains_per_read.append(chains)
         for ci, c in enumerate(chains):
-            jobs.append(((r, ci), c, reads[r], S, l_pac))
+            jobs.append(((r, ci), c, reads[r], idx))
     # Stage 4: batched inter-task BSW with length sorting
     execu = BatchedBSWExecutor(opt.bsw, block=opt.bsw_block, sort=opt.bsw_sort)
     execu.plan_and_run(jobs)
@@ -484,7 +494,7 @@ def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
     for r in range(R):
         alns: list[Alignment] = []
         for ci, c in enumerate(chains_per_read[r]):
-            alns.extend(chain2aln(c, reads[r], S, l_pac, opt.bsw,
+            alns.extend(chain2aln(c, reads[r], idx, opt.bsw,
                                   execu.executor((r, ci))))
         results.append(mark_and_finalize(alns, reads[r], S, l_pac, opt.bsw,
                                          opt.mem.min_seed_len))
@@ -532,12 +542,14 @@ def align_pairs_optimized(idx: FMIndex, reads1: np.ndarray,
     return lines, stats
 
 
-def to_sam(reads: np.ndarray, results, names=None) -> list[str]:
+def to_sam(reads: np.ndarray, results, names=None, idx=None) -> list[str]:
+    """SAM body lines; pass ``idx`` for per-contig RNAME/POS translation
+    (see ``core.contig.sam_header`` for the matching @SQ lines)."""
     lines = []
     for r, alns in enumerate(results):
         name = names[r] if names else f"read{r}"
         if not alns:
-            lines.append(format_sam(name, reads[r], None, 0))
+            lines.append(format_sam(name, reads[r], None, idx))
         for a in alns:
-            lines.append(format_sam(name, reads[r], a, 0))
+            lines.append(format_sam(name, reads[r], a, idx))
     return lines

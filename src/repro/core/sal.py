@@ -74,8 +74,9 @@ def seeds_from_intervals(idx, mems_per_read, max_occ: int, *,
     """SAL stage of the pipeline: bi-intervals -> reference-coordinate seeds.
 
     Mirrors bwa's occurrence sampling: if an SMEM has s > max_occ hits, take
-    every ceil(s/max_occ)-th row.  Seeds bridging the forward/reverse-
-    complement boundary are dropped (as in bwa).
+    every ceil(s/max_occ)-th row.  Seeds bridging a contig-block boundary
+    (forward/reverse-complement junction, or any contig junction for a
+    multi-contig index) are dropped (as in bwa).
 
     Returns per-read list of seeds (rbeg, qbeg, len, interval_size) plus the
     total number of SA lookups performed (paper Table 5 "# SA offsets").
@@ -100,14 +101,20 @@ def seeds_from_intervals(idx, mems_per_read, max_occ: int, *,
         vals, _ = sal_compressed(fm, rows, occ_eta32=occ_eta32)
     else:
         vals = sal_direct(fm, rows)
-    vals = np.asarray(vals)
-    n = idx.n_ref
+    vals = np.asarray(vals, np.int64)
+    from .contig import contig_edges
+    edges = contig_edges(idx)
+    slens = np.array([qe - qb for (_, qb, qe, _) in meta], np.int64)
+    # one vectorized block test for the whole batch: a seed survives iff
+    # rbeg and rbeg+slen-1 fall in the same contig block (the batched
+    # form of core.contig.seed_within_contig — keep the predicates in sync)
+    keep = np.searchsorted(edges, vals, side="right") == \
+        np.searchsorted(edges, vals + slens - 1, side="right")
     out = [[] for _ in mems_per_read]
-    for (r, qb, qe, s), rbeg in zip(meta, vals.tolist()):
-        slen = qe - qb
-        if rbeg < n < rbeg + slen:
-            continue                      # bridges fwd/rev boundary
-        out[r].append((int(rbeg), qb, slen, s))
+    for (r, qb, qe, s), rbeg, ok in zip(meta, vals.tolist(), keep.tolist()):
+        if not ok:
+            continue                      # bridges a contig-block boundary
+        out[r].append((int(rbeg), qb, qe - qb, s))
     for r in range(len(out)):
         out[r].sort()
     return out, len(rows_all)

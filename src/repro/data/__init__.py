@@ -1,2 +1,3 @@
 from .reads import (make_reference, simulate_reads, simulate_pairs,  # noqa: F401
-                    encode, decode, revcomp_read)
+                    simulate_reference, simulate_reads_multi,
+                    simulate_pairs_multi, encode, decode, revcomp_read)

@@ -62,6 +62,96 @@ def make_reference(n: int, *, seed: int = 0, repeat_frac: float = 0.3,
     return ref
 
 
+def simulate_reference(n: int, contigs: int = 1, *, seed: int = 0,
+                       names: list[str] | None = None,
+                       repeat_frac: float = 0.3, repeat_len: int = 200
+                       ) -> list[tuple[str, np.ndarray]]:
+    """Multi-contig reference: ``contigs`` chromosomes totalling ~``n``
+    bases, as (name, codes) pairs ready for ``build_contig_index``.
+
+    Contig sizes are deliberately uneven (a geometric-ish taper, like real
+    karyotypes) so coordinate-translation bugs that only show up on short
+    trailing contigs get exercised.  Each contig carries its own planted
+    repeat structure (see ``make_reference``).
+    """
+    assert contigs >= 1
+    if names is None:
+        names = [f"chr{i + 1}" for i in range(contigs)]
+    assert len(names) == contigs
+    w = np.array([2.0 ** (-0.5 * i) for i in range(contigs)])
+    sizes = np.maximum((n * w / w.sum()).astype(np.int64), 2 * repeat_len + 8)
+    return [(names[i],
+             make_reference(int(sizes[i]), seed=seed + 1000 * i,
+                            repeat_frac=repeat_frac, repeat_len=repeat_len))
+            for i in range(contigs)]
+
+
+def _contig_assignment(rng, lengths: np.ndarray, count: int) -> np.ndarray:
+    """Per-item contig id, drawn proportional to contig length."""
+    p = lengths / lengths.sum()
+    return rng.choice(len(lengths), size=count, p=p)
+
+
+def simulate_reads_multi(ref_contigs, n_reads: int, read_len: int, *,
+                         seed: int = 1, **kw):
+    """Reads drawn across contigs (coverage proportional to length).
+
+    ``ref_contigs``: (name, codes) pairs from ``simulate_reference``.
+    Returns (reads, truth) where truth carries per-read ``contig`` (id
+    into the contig list), ``name``, ``pos`` (contig-local), and
+    ``is_rev`` — the multi-contig analogue of ``simulate_reads``.
+    """
+    rng = np.random.default_rng(seed)
+    lengths = np.array([len(a) for _, a in ref_contigs], np.int64)
+    cid = _contig_assignment(rng, lengths, n_reads)
+    reads = np.empty((n_reads, read_len), np.uint8)
+    pos = np.empty(n_reads, np.int64)
+    is_rev = np.empty(n_reads, bool)
+    for c in range(len(ref_contigs)):
+        sel = np.nonzero(cid == c)[0]
+        if not len(sel):
+            continue
+        sub, t = simulate_reads(ref_contigs[c][1], len(sel), read_len,
+                                seed=seed + 7919 * (c + 1), **kw)
+        reads[sel] = sub
+        pos[sel] = t["pos"]
+        is_rev[sel] = t["is_rev"]
+    truth = {"contig": cid, "name": [ref_contigs[c][0] for c in cid],
+             "pos": pos, "is_rev": is_rev}
+    return reads, truth
+
+
+def simulate_pairs_multi(ref_contigs, n_pairs: int, read_len: int, *,
+                         seed: int = 1, **kw):
+    """FR pairs drawn across contigs — each FRAGMENT stays inside one
+    contig (fragments never span chromosomes), mirroring real libraries.
+
+    Returns (reads1, reads2, truth); truth adds per-pair ``contig`` and
+    ``name`` to the fields of ``simulate_pairs`` (whose positions stay
+    contig-local).
+    """
+    rng = np.random.default_rng(seed)
+    lengths = np.array([len(a) for _, a in ref_contigs], np.int64)
+    cid = _contig_assignment(rng, lengths, n_pairs)
+    reads1 = np.empty((n_pairs, read_len), np.uint8)
+    reads2 = np.empty((n_pairs, read_len), np.uint8)
+    truth = {"contig": cid, "name": [ref_contigs[c][0] for c in cid]}
+    per_pair = {}
+    for c in range(len(ref_contigs)):
+        sel = np.nonzero(cid == c)[0]
+        if not len(sel):
+            continue
+        r1, r2, t = simulate_pairs(ref_contigs[c][1], len(sel), read_len,
+                                   seed=seed + 7919 * (c + 1), **kw)
+        reads1[sel] = r1
+        reads2[sel] = r2
+        for k, v in t.items():
+            per_pair.setdefault(k, np.zeros(n_pairs, np.asarray(v).dtype))
+            per_pair[k][sel] = v
+    truth.update(per_pair)
+    return reads1, reads2, truth
+
+
 def simulate_reads(ref: np.ndarray, n_reads: int, read_len: int, *,
                    seed: int = 1, snp_rate: float = 0.01,
                    indel_rate: float = 0.001, n_rate: float = 0.001,

@@ -1,11 +1,14 @@
 import os
+_N_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
 os.environ["XLA_FLAGS"] = os.environ.get(
-    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+    "XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={_N_DEV}"
 
-# NOTE: the two lines above MUST precede any jax-touching import (jax locks
+# NOTE: the lines above MUST precede any jax-touching import (jax locks
 # the device count at first backend init; the dry-run needs 512 placeholder
 # host devices to build the production meshes) — hence no module docstring
-# above them and no `from __future__` import in this file.
+# above them and no `from __future__` import in this file.  The CI smoke
+# job sets REPRO_DRYRUN_DEVICES=8: --smoke only needs a 2x2 mesh, and 512
+# host devices cost minutes of backend setup on a CI runner.
 
 # Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 #
@@ -32,7 +35,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.configs import (ARCHS, SHAPES, ShapeConfig, get_arch,
+                           shape_applicable, smoke_config)
 from repro.dist.api import active_mesh
 from repro.dist.sharding import (make_batch_specs, make_cache_specs,
                                  make_param_specs, moment_specs, rules_for)
@@ -275,16 +279,83 @@ def cells(multi_pod: bool):
             yield arch, sname, multi_pod
 
 
+# ---------------------------------------------------------------------
+# CI smoke sweep: reduced configs on a 2x2 mesh, <2 min on CPU
+# ---------------------------------------------------------------------
+
+SMOKE_SHAPES = {
+    "train_smoke": ShapeConfig("train_smoke", 128, 8, "train"),
+    "prefill_smoke": ShapeConfig("prefill_smoke", 128, 4, "prefill"),
+    "decode_smoke": ShapeConfig("decode_smoke", 128, 8, "decode"),
+}
+# one arch per family (dense / MoE / SSM) x the three step kinds
+SMOKE_CELLS = [
+    ("qwen1.5-0.5b", "train_smoke"),
+    ("qwen1.5-0.5b", "prefill_smoke"),
+    ("qwen1.5-0.5b", "decode_smoke"),
+    ("dbrx-132b", "train_smoke"),
+    ("mamba2-130m", "decode_smoke"),
+]
+
+
+def run_smoke(out_dir: pathlib.Path) -> list[tuple[str, str]]:
+    """The ROADMAP's CI-sized dry-run cell: lower + compile every smoke
+    (arch x shape) on the 2x2 mesh with the SAME jit/sharding plumbing as
+    the production sweep — a sharding mismatch or collective regression
+    fails CI in minutes instead of surfacing on a pod.  Returns failures.
+    """
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh()
+    failures = []
+    for arch, sname in SMOKE_CELLS:
+        cfg = pad_vocab(smoke_config(arch))
+        shape = SMOKE_SHAPES[sname]
+        tag = f"smoke__{arch}__{sname}"
+        try:
+            compiled, t_lower, t_compile = _compile_cell(
+                cfg, shape, mesh, q_block=64, kv_block=64)
+            mem = compiled.memory_analysis()
+            rec = {
+                "arch": arch, "shape": sname, "mesh": "2x2",
+                "kind": shape.kind,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                               or 0)
+                              + (getattr(mem, "temp_size_in_bytes", 0)
+                                 or 0),
+            }
+            (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+            print(f"OK   {tag:45s} lower={t_lower:5.1f}s "
+                  f"compile={t_compile:5.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — report, continue sweep
+            failures.append((tag, repr(e)))
+            print(f"FAIL {tag}: {e!r}", flush=True)
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep: smoke configs on a 2x2 mesh")
     ap.add_argument("--out-dir", default=str(OUT_DIR))
     args = ap.parse_args()
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.smoke:
+        failures = run_smoke(out_dir)
+        if failures:
+            print(f"\n{len(failures)} FAILURES:")
+            for t, e in failures:
+                print(" ", t, e[:200])
+            raise SystemExit(1)
+        print(f"\nall {len(SMOKE_CELLS)} smoke cells compiled")
+        return
 
     todo = list(cells(args.multi_pod)) if args.all else \
         [(args.arch, args.shape, args.multi_pod)]

@@ -21,6 +21,13 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_smoke_mesh():
+    """2x2 data x model mesh for the CI-sized dry-run smoke sweep: small
+    enough to compile in seconds on host devices, but still exercising
+    BOTH sharded axes (a 1x1 mesh would hide every partitioning bug)."""
+    return jax.make_mesh((2, 2), ("data", "model"))
+
+
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

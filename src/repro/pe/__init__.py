@@ -18,7 +18,8 @@ from .pestat import PairStat, estimate_pestat, infer_dir  # noqa: F401
 from .rescue import (PEOptions, RescueTask, best_diag_seed,  # noqa: F401
                      merge_rescues, plan_rescues, rescue_window,
                      run_rescues_batched, run_rescues_scalar)
-from .pairing import emit_pair, pair_score, select_pair  # noqa: F401
+from .pairing import (blend_mapq, emit_pair, pair_score,  # noqa: F401
+                      raw_mapq, select_pair)
 
 
 def pair_pipeline(idx, reads1, reads2, res1, res2, opt, peopt=None, *,
@@ -27,29 +28,33 @@ def pair_pipeline(idx, reads1, reads2, res1, res2, opt, peopt=None, *,
     SAM.  ``res1``/``res2`` are the per-end alignment lists from the SE
     stage and are extended IN PLACE with rescued alignments.
 
+    ``idx`` may be a multi-contig ``ContigIndex``: insert sizes, rescue
+    windows and proper pairs are all confined to single contigs, and SAM
+    mate fields translate through the contig table (RNEXT ``=`` only for
+    same-contig mates, TLEN=0 across contigs).
+
     Returns (sam_lines, stats).
     """
     peopt = peopt or PEOptions()
-    S, l_pac = idx.seq, idx.n_ref
     p = opt.bsw
-    pes = estimate_pestat(res1, res2, l_pac, max_ins=peopt.max_ins)
-    tasks = plan_rescues((res1, res2), (reads1, reads2), pes, l_pac,
-                         peopt, S)
+    pes = estimate_pestat(res1, res2, idx, max_ins=peopt.max_ins)
+    tasks = plan_rescues((res1, res2), (reads1, reads2), pes, idx, peopt)
     if batched:
-        outs, rstats = run_rescues_batched(tasks, S, l_pac, p,
+        outs, rstats = run_rescues_batched(tasks, idx, p,
                                            block=opt.bsw_block,
                                            sort=opt.bsw_sort)
     else:
-        outs, rstats = run_rescues_scalar(tasks, S, l_pac, p)
-    n_rescued = merge_rescues((res1, res2), tasks, outs, S, l_pac, p,
+        outs, rstats = run_rescues_scalar(tasks, idx, p)
+    n_rescued = merge_rescues((res1, res2), tasks, outs, idx, p,
                               opt.mem.min_seed_len, peopt)
     lines: list[str] = []
     n_proper = 0
     for pid in range(len(reads1)):
         qname = names[pid] if names else f"pair{pid}"
         two, proper = emit_pair(qname, reads1[pid], reads2[pid],
-                                res1[pid], res2[pid], pes, l_pac,
-                                p.a, peopt.pen_unpaired)
+                                res1[pid], res2[pid], pes, idx,
+                                p.a, peopt.pen_unpaired,
+                                mapq_blend=peopt.mapq_blend)
         lines.extend(two)
         n_proper += int(proper)
     stats = dict(rstats)

@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from ..core.contig import same_contig
+
 MIN_DIR_CNT = 10
 MIN_DIR_RATIO = 0.05
 OUTLIER_BOUND = 2.0
@@ -55,20 +57,24 @@ def _percentile(v: list, frac: float) -> float:
     return v[min(int(frac * len(v) + 0.499), len(v) - 1)]
 
 
-def estimate_pestat(results1, results2, l_pac: int, *,
+def estimate_pestat(results1, results2, idx, *,
                     max_ins: int = 10000) -> list[PairStat]:
     """Per-orientation PairStat[4] from per-pair alignment lists.
 
     Only pairs where BOTH ends map uniquely (best alignment's runner-up
     score below MIN_RATIO of the best) vote, mirroring mem_pestat's
-    cal_sub gate.
+    cal_sub gate.  ``idx`` is the reference index; pairs whose ends land
+    on different contigs have no defined insert size and never vote.
     """
+    l_pac = int(idx.n_ref)
     isize: list[list[int]] = [[], [], [], []]
     for a1s, a2s in zip(results1, results2):
         if not a1s or not a2s:
             continue
         b1, b2 = a1s[0], a2s[0]
         if b1.sub > MIN_RATIO * b1.score or b2.sub > MIN_RATIO * b2.score:
+            continue
+        if not same_contig(idx, b1.rb, b2.rb):
             continue
         r, d = infer_dir(l_pac, b1.rb, b2.rb)
         if 0 < d <= max_ins:

@@ -30,6 +30,7 @@ import numpy as np
 
 from ..core.bsw import BSWParams
 from ..core.chain import Chain
+from ..core.contig import block_bounds, same_contig
 from ..core.pipeline import (BatchedBSWExecutor, _bsw_immediate, chain2aln,
                              approx_mapq, finalize_alignment)
 from .pestat import PairStat, infer_dir
@@ -72,15 +73,18 @@ def best_diag_seed(q: np.ndarray, S: np.ndarray, wlo: int, whi: int,
     return (wlo + int(d) + qb, qb, best)
 
 
-def rescue_window(l_pac: int, b1: int, r: int, pes_r: PairStat,
+def rescue_window(idx, b1: int, r: int, pes_r: PairStat,
                   l_ms: int) -> tuple[int, int] | None:
     """Reference window [wlo, whi) that may contain the mate's start rb.
 
     Solves ``infer_dir(l_pac, b1, rb) == (r, dist)`` for ``dist`` in
-    [low, high], widened by the mate length, then clamped to a single
-    strand half of the doubled reference (rescue never crosses the
-    forward/reverse boundary, like _chain_rmax).
+    [low, high], widened by the mate length, then clamped to the anchor
+    contig's block on the mate's strand (rescue never crosses a contig or
+    the forward/reverse boundary, like _chain_rmax): a proper pair lives
+    on ONE contig, so the mate is searched only inside the anchor's
+    contig, mirrored to the other strand half for FR/RF orientations.
     """
+    l_pac = idx.n_ref
     low, high = pes_r.low, pes_r.high
     if r == 0:                       # same strand, mate downstream
         lo, hi = b1 + low, b1 + high
@@ -92,10 +96,10 @@ def rescue_window(l_pac: int, b1: int, r: int, pes_r: PairStat,
         lo, hi = 2 * l_pac - 1 - b1 + low, 2 * l_pac - 1 - b1 + high
     wlo, whi = lo - l_ms, hi + l_ms
     same = r in (0, 3)
-    anchor_rev = b1 >= l_pac
-    target_rev = anchor_rev if same else not anchor_rev
-    half_lo, half_hi = (l_pac, 2 * l_pac) if target_rev else (0, l_pac)
-    wlo, whi = max(wlo, half_lo), min(whi, half_hi)
+    alo, ahi = block_bounds(idx, b1)      # anchor contig, anchor strand
+    blk_lo, blk_hi = (alo, ahi) if same \
+        else (2 * l_pac - ahi, 2 * l_pac - alo)   # mirrored block
+    wlo, whi = max(wlo, blk_lo), min(whi, blk_hi)
     if whi <= wlo:
         return None
     return int(wlo), int(whi)
@@ -109,11 +113,11 @@ class PEOptions:
     max_matesw: int = 2              # rescue anchors per end (bwa: 50)
     rescue_min_seed: int = 10        # window anchor seed (< SMEM's 19)
     min_score: int = 30              # emission threshold (bwa -T)
+    mapq_blend: bool = True          # bwa's q_pe/q_se pair-aware MAPQ
 
 
 def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],
-                 l_pac: int, peopt: PEOptions,
-                 S: np.ndarray) -> list[RescueTask]:
+                 idx, peopt: PEOptions) -> list[RescueTask]:
     """mem_sam_pe's rescue fan-out, planned from the PRE-rescue state.
 
     For each end's strong alignments (score within pen_unpaired of the
@@ -123,6 +127,7 @@ def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],
     therefore the output — independent of execution order, which is what
     lets the scalar and batched drivers be byte-identical.
     """
+    S, l_pac = idx.seq, idx.n_ref
     tasks: list[RescueTask] = []
     n_pairs = len(results[0])
     for pid in range(n_pairs):
@@ -140,16 +145,19 @@ def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],
             for a in anchors:
                 # orientations already satisfied by a mate alignment
                 # consistent with THIS anchor (mem_matesw's skip[], which
-                # re-evaluates per call)
+                # re-evaluates per call); an alignment on a different
+                # contig can never be consistent with the anchor
                 skip = [pes[r].failed for r in range(4)]
                 for m in regs[other]:
+                    if not same_contig(idx, a.rb, m.rb):
+                        continue
                     r, d = infer_dir(l_pac, a.rb, m.rb)
                     if not pes[r].failed and pes[r].low <= d <= pes[r].high:
                         skip[r] = True
                 for r in range(4):
                     if skip[r]:
                         continue
-                    win = rescue_window(l_pac, a.rb, r, pes[r], len(mate))
+                    win = rescue_window(idx, a.rb, r, pes[r], len(mate))
                     if win is None:
                         continue
                     seed = best_diag_seed(mate, S, win[0], win[1],
@@ -162,8 +170,7 @@ def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],
     return tasks
 
 
-def run_rescues_scalar(tasks: list[RescueTask], S: np.ndarray, l_pac: int,
-                       p: BSWParams):
+def run_rescues_scalar(tasks: list[RescueTask], idx, p: BSWParams):
     """Baseline: each rescue extension runs the scalar oracle inline."""
     fn = _bsw_immediate(p)
     n_ext = [0]
@@ -175,22 +182,21 @@ def run_rescues_scalar(tasks: list[RescueTask], S: np.ndarray, l_pac: int,
             n_ext[0] += 1
         return fn(side, seed_id, rnd, q, t, h0, w)
 
-    outs = [chain2aln(t.chain, t.query, S, l_pac, p, counting)
+    outs = [chain2aln(t.chain, t.query, idx, p, counting)
             for t in tasks]
     return outs, dict(rescue_tasks=len(tasks), rescue_bsw=n_ext[0])
 
 
-def run_rescues_batched(tasks: list[RescueTask], S: np.ndarray, l_pac: int,
-                        p: BSWParams, *, block: int = 256,
-                        sort: bool = True):
+def run_rescues_batched(tasks: list[RescueTask], idx, p: BSWParams, *,
+                        block: int = 256, sort: bool = True):
     """Optimized: all rescue extensions across the batch pooled,
     length-sorted and dispatched through the batched BSW executor, then
     decisions replayed per task — same structure as the main pipeline's
     Stage 4."""
     execu = BatchedBSWExecutor(p, block=block, sort=sort)
-    execu.plan_and_run([(ti, t.chain, t.query, S, l_pac)
+    execu.plan_and_run([(ti, t.chain, t.query, idx)
                         for ti, t in enumerate(tasks)])
-    outs = [chain2aln(t.chain, t.query, S, l_pac, p, execu.executor(ti))
+    outs = [chain2aln(t.chain, t.query, idx, p, execu.executor(ti))
             for ti, t in enumerate(tasks)]
     return outs, dict(rescue_tasks=len(tasks),
                       rescue_bsw=execu.stats["tasks"],
@@ -199,7 +205,7 @@ def run_rescues_batched(tasks: list[RescueTask], S: np.ndarray, l_pac: int,
 
 
 def merge_rescues(results: tuple, tasks: list[RescueTask], outs: list,
-                  S: np.ndarray, l_pac: int, p: BSWParams,
+                  idx, p: BSWParams,
                   min_seed_len: int, peopt: PEOptions) -> int:
     """Fold rescue alignments into the per-end lists (shared by both
     drivers; task order is deterministic, so so is the merge).
@@ -208,6 +214,7 @@ def merge_rescues(results: tuple, tasks: list[RescueTask], outs: list,
     the emission threshold; duplicate regions (two anchors rescuing the
     same placement) are dropped.  Returns the number of accepted rescues.
     """
+    S, l_pac = idx.seq, idx.n_ref
     n_ok = 0
     for t, alns in zip(tasks, outs):
         for a in alns:

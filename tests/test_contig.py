@@ -1,0 +1,271 @@
+"""Multi-contig reference support: coordinate translation, boundary
+filtering/clipping, per-contig SAM emission and cross-contig pair
+semantics — plus the guarantee that a single-contig ContigIndex is
+byte-identical to the plain FMIndex path."""
+
+import numpy as np
+import pytest
+
+from repro.core import fmindex as fmx
+from repro.core.contig import (block_bounds, build_contig_index, contig_id,
+                               make_edges, sam_header, same_contig,
+                               seed_within_contig, translate)
+from repro.core.pipeline import (align_pairs_baseline, align_pairs_optimized,
+                                 align_reads_baseline, align_reads_optimized,
+                                 to_sam)
+from repro.core.sam import cigar_reflen
+from repro.data import (make_reference, simulate_pairs_multi,
+                        simulate_reads_multi, simulate_reference)
+
+L = 101
+
+
+@pytest.fixture(scope="module")
+def world():
+    contigs = simulate_reference(45_000, 3, seed=11, repeat_frac=0.2)
+    return contigs, build_contig_index(contigs)
+
+
+@pytest.fixture(scope="module")
+def aligned_reads(world):
+    contigs, idx = world
+    reads, truth = simulate_reads_multi(contigs, 48, L, seed=3)
+    base, _ = align_reads_baseline(idx, reads)
+    opt_, _ = align_reads_optimized(idx, reads)
+    return reads, truth, base, opt_
+
+
+def _fields(line):
+    f = line.split("\t")
+    return dict(qname=f[0], flag=int(f[1]), rname=f[2], pos=int(f[3]),
+                mapq=int(f[4]), cigar=f[5], rnext=f[6], pnext=int(f[7]),
+                tlen=int(f[8]))
+
+
+# ---------------------------------------------------------------------
+# coordinate translation
+# ---------------------------------------------------------------------
+
+def test_edges_layout(world):
+    contigs, idx = world
+    l_pac = idx.n_ref
+    lens = [len(a) for _, a in contigs]
+    assert l_pac == sum(lens)
+    expect = [0, lens[0], lens[0] + lens[1], l_pac,
+              2 * l_pac - lens[0] - lens[1], 2 * l_pac - lens[0], 2 * l_pac]
+    assert idx.edges.tolist() == expect
+    assert make_edges(np.array([0]), 100).tolist() == [0, 100, 200]
+
+
+def test_translate_boundary_positions(world):
+    contigs, idx = world
+    offs = idx.offsets
+    for i, (name, arr) in enumerate(contigs):
+        # first and last base of every contig
+        assert translate(idx, int(offs[i])) == (name, 0)
+        assert translate(idx, int(offs[i]) + len(arr) - 1) == \
+            (name, len(arr) - 1)
+    # one past a contig end is the NEXT contig's base 0
+    assert translate(idx, int(offs[1]) - 1) == (contigs[0][0],
+                                                len(contigs[0][1]) - 1)
+    assert translate(idx, int(offs[1])) == (contigs[1][0], 0)
+
+
+def test_contig_id_strand_agnostic(world):
+    contigs, idx = world
+    l_pac = idx.n_ref
+    for i, (_, arr) in enumerate(contigs):
+        fwd = int(idx.offsets[i]) + len(arr) // 2
+        rev = 2 * l_pac - 1 - fwd            # same base, reverse half
+        assert contig_id(idx, fwd) == i
+        assert contig_id(idx, rev) == i
+        assert same_contig(idx, fwd, rev)
+    assert not same_contig(idx, int(idx.offsets[0]), int(idx.offsets[1]))
+
+
+def test_block_bounds_and_seed_filter(world):
+    contigs, idx = world
+    l_pac = idx.n_ref
+    o1 = int(idx.offsets[1])
+    assert block_bounds(idx, o1 - 1) == (0, o1)
+    assert block_bounds(idx, o1) == (o1, int(idx.offsets[2]))
+    # reverse half: last contig's mirrored block starts at l_pac
+    assert block_bounds(idx, l_pac) == (l_pac, 2 * l_pac - int(idx.offsets[2]))
+    # a seed straddling the chr1/chr2 junction must be rejected
+    assert seed_within_contig(idx, o1 - 5, 5)
+    assert not seed_within_contig(idx, o1 - 5, 6)
+    assert seed_within_contig(idx, o1, 10)
+
+
+def test_sq_header(world):
+    contigs, idx = world
+    hdr = sam_header(idx, extra=["@PG\tID:repro"])
+    assert hdr[0].startswith("@HD")
+    assert hdr[1:4] == [f"@SQ\tSN:{n}\tLN:{len(a)}" for n, a in contigs]
+    assert hdr[-1] == "@PG\tID:repro"
+
+
+# ---------------------------------------------------------------------
+# alignment over multiple contigs
+# ---------------------------------------------------------------------
+
+def test_multi_contig_identical_output(aligned_reads, world):
+    _, idx = world
+    reads, _, base, opt_ = aligned_reads
+    assert to_sam(reads, base, idx=idx) == to_sam(reads, opt_, idx=idx)
+
+
+def test_reads_recover_their_contig(aligned_reads, world):
+    _, idx = world
+    reads, truth, _, opt_ = aligned_reads
+    ok = 0
+    for r in range(len(reads)):
+        prim = [a for a in opt_[r] if a.secondary < 0]
+        if not prim:
+            continue
+        name, lpos = translate(idx, prim[0].pos)
+        if name == truth["name"][r] and abs(lpos - truth["pos"][r]) <= 12 \
+                and prim[0].is_rev == truth["is_rev"][r]:
+            ok += 1
+    assert ok >= 0.85 * len(reads)
+
+
+def test_no_alignment_crosses_contig_boundary(aligned_reads, world):
+    contigs, idx = world
+    lens = {n: len(a) for n, a in contigs}
+    _, _, _, opt_ = aligned_reads
+    for alns in opt_:
+        for a in alns:
+            name, lpos = translate(idx, a.pos)
+            assert lpos >= 0
+            assert lpos + cigar_reflen(a) <= lens[name]
+
+
+def test_junction_read_clipped_to_one_contig(world):
+    """A read whose sequence spans the chr1/chr2 junction has no single
+    placement: its best chain must come from ONE side and the emitted
+    alignment must be soft-clipped to that contig, never crossing it."""
+    contigs, idx = world
+    o1 = int(idx.offsets[1])
+    read = idx.seq[o1 - 60: o1 + 41].copy()          # 60 bases chr1 + 41 chr2
+    res, _ = align_reads_optimized(idx, read[None, :])
+    assert res[0], "junction read found no alignment at all"
+    lens = {n: len(a) for n, a in contigs}
+    for a in res[0]:
+        name, lpos = translate(idx, a.pos)
+        assert lpos + cigar_reflen(a) <= lens[name]
+        # clipped: consumes at most one side's bases
+        m = sum(n for n, op in a.cigar if op == "M")
+        assert m <= 60 + 12
+
+
+def test_rc_strand_last_contig(world):
+    """Reverse-complement read from the END of the LAST contig: the
+    reverse-half coordinate math (2*l_pac - re) must still land inside
+    the last contig's local coordinates."""
+    contigs, idx = world
+    name3, arr3 = contigs[-1]
+    start = len(arr3) - L - 1
+    frag = arr3[start: start + L]
+    rc = (3 - frag[::-1]).astype(np.uint8)
+    res, _ = align_reads_optimized(idx, rc[None, :])
+    prim = [a for a in res[0] if a.secondary < 0]
+    assert prim and prim[0].is_rev
+    rname, lpos = translate(idx, prim[0].pos)
+    assert rname == name3
+    assert abs(lpos - start) <= 2
+
+
+def test_single_contig_matches_plain_fmindex():
+    """C=1 degenerate case: a ContigIndex named "ref" emits byte-identical
+    SAM to the pre-multi-contig plain FMIndex path."""
+    ref = make_reference(12_000, seed=5)
+    plain = fmx.build_index(ref)
+    one = build_contig_index([("ref", ref)])
+    from repro.data import simulate_reads
+    reads, _ = simulate_reads(ref, 12, L, seed=2)
+    rp, _ = align_reads_optimized(plain, reads)
+    rc_, _ = align_reads_optimized(one, reads)
+    assert to_sam(reads, rp) == to_sam(reads, rc_, idx=one)
+    assert sam_header(plain)[1] == sam_header(one)[1] == \
+        "@SQ\tSN:ref\tLN:12000"
+
+
+# ---------------------------------------------------------------------
+# paired-end across contigs
+# ---------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pe_world(world):
+    contigs, idx = world
+    r1, r2, truth = simulate_pairs_multi(contigs, 128, L, insert_mean=250,
+                                         insert_std=25, seed=5,
+                                         burst_frac=0.1)
+    base, bstats = align_pairs_baseline(idx, r1, r2)
+    opt_, ostats = align_pairs_optimized(idx, r1, r2)
+    return r1, r2, truth, base, bstats, opt_, ostats
+
+
+def test_pe_multi_contig_identical(pe_world):
+    _, _, _, base, bstats, opt_, _ = pe_world
+    assert base == opt_
+    assert bstats["n_proper"] > 0 and bstats["n_rescued"] > 0
+
+
+def test_pe_rname_and_rnext(pe_world, world):
+    contigs, idx = world
+    names = {n for n, _ in contigs}
+    _, _, truth, base, _, _, _ = pe_world
+    n_named = 0
+    for pid in range(len(truth["contig"])):
+        e1, e2 = _fields(base[2 * pid]), _fields(base[2 * pid + 1])
+        for e in (e1, e2):
+            if not e["flag"] & 0x4:
+                assert e["rname"] in names
+        # proper pairs sit on the pair's simulated contig
+        if e1["flag"] & 0x2:
+            assert e1["rname"] == e2["rname"] == truth["name"][pid]
+            assert e1["rnext"] == e2["rnext"] == "="
+            n_named += 1
+    assert n_named > 0
+
+
+def test_cross_contig_pair_flags_tlen(world):
+    """Ends mapped on different contigs: never proper (no 0x2), TLEN=0,
+    RNEXT carries the mate's contig name, PNEXT its local position."""
+    contigs, idx = world
+    (n1, a1), (n2, a2), _ = contigs
+    # enough well-behaved pairs on chr1 for a usable insert distribution,
+    # plus chimeric pairs: end1 from chr1, end2 from chr2
+    r1, r2, _ = simulate_pairs_multi(contigs[:1], 64, L, insert_mean=250,
+                                     insert_std=25, seed=9)
+    p1, p2 = 500, 700
+    chim1 = a1[p1:p1 + L].copy()
+    chim2 = (3 - a2[p2:p2 + L][::-1]).astype(np.uint8)   # RC end on chr2
+    r1 = np.concatenate([r1, chim1[None, :]])
+    r2 = np.concatenate([r2, chim2[None, :]])
+    lines, stats = align_pairs_optimized(idx, r1, r2)
+    e1, e2 = _fields(lines[-2]), _fields(lines[-1])
+    assert not e1["flag"] & 0x4 and not e2["flag"] & 0x4
+    assert e1["rname"] == n1 and e2["rname"] == n2
+    assert not e1["flag"] & 0x2 and not e2["flag"] & 0x2
+    assert e1["tlen"] == 0 and e2["tlen"] == 0
+    assert e1["rnext"] == n2 and e2["rnext"] == n1
+    assert e1["pnext"] == e2["pos"] and e2["pnext"] == e1["pos"]
+    assert abs(e1["pos"] - 1 - p1) <= 2 and abs(e2["pos"] - 1 - p2) <= 2
+
+
+def test_cross_contig_pairs_never_vote_pestat(world):
+    """A batch of ONLY cross-contig pairs yields no insert-size estimate:
+    every orientation fails and nothing is marked proper."""
+    contigs, idx = world
+    (_, a1), (_, a2), _ = contigs
+    rng = np.random.default_rng(0)
+    n = 24
+    r1 = np.stack([a1[p:p + L] for p in rng.integers(0, len(a1) - L, n)])
+    r2 = np.stack([a2[p:p + L] for p in rng.integers(0, len(a2) - L, n)])
+    lines, stats = align_pairs_optimized(idx, r1, r2)
+    assert stats["pes_failed"] == [True, True, True, True]
+    assert stats["n_proper"] == 0
+    for ln in lines:
+        assert not _fields(ln)["flag"] & 0x2

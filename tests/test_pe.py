@@ -12,8 +12,9 @@ from repro.core.pipeline import (PipelineOptions, align_pairs_baseline,
                                  align_pairs_optimized,
                                  align_reads_optimized)
 from repro.data import make_reference, simulate_pairs
-from repro.pe import (PEOptions, estimate_pestat, infer_dir, plan_rescues,
-                      run_rescues_batched, run_rescues_scalar)
+from repro.pe import (PEOptions, blend_mapq, estimate_pestat, infer_dir,
+                      plan_rescues, raw_mapq, run_rescues_batched,
+                      run_rescues_scalar)
 
 N_PAIRS = 256
 MEAN, STD, L = 250.0, 25.0, 101
@@ -94,14 +95,12 @@ def test_batched_rescue_identical_to_scalar(world):
     n = len(r1)
     res, _ = align_reads_optimized(idx, np.concatenate([r1, r2]))
     res1, res2 = res[:n], res[n:]
-    S, l_pac = idx.seq, idx.n_ref
     opt = PipelineOptions()
-    pes = estimate_pestat(res1, res2, l_pac)
-    tasks = plan_rescues((res1, res2), (r1, r2), pes, l_pac,
-                         PEOptions(), S)
+    pes = estimate_pestat(res1, res2, idx)
+    tasks = plan_rescues((res1, res2), (r1, r2), pes, idx, PEOptions())
     assert len(tasks) >= 10
-    outs_s, _ = run_rescues_scalar(tasks, S, l_pac, opt.bsw)
-    outs_b, _ = run_rescues_batched(tasks, S, l_pac, opt.bsw)
+    outs_s, _ = run_rescues_scalar(tasks, idx, opt.bsw)
+    outs_b, _ = run_rescues_batched(tasks, idx, opt.bsw)
     assert outs_s == outs_b
 
 
@@ -150,6 +149,79 @@ def test_unmapped_mate_rescued(world, pairs, aligned):
         if abs(e2["pos"] - 1 - truth["pos2"][pid]) <= 12:
             rescued_ok += 1
     assert rescued_ok >= 0.5 * len(burst)
+
+
+def test_mapq_blend_pinned_values():
+    """Regression pins for the mem_sam_pe q_pe/q_se port (a=1 matrix).
+
+    blend_mapq(q_pair, sub_pair, score_un, mapq1, mapq2,
+               score1, csub1, score2, csub2, a)
+    """
+    assert raw_mapq(30, 1) == 181 and raw_mapq(3, 1) == 18
+    # strong pair evidence (q_pe caps at 60): a weak end is lifted by at
+    # most +40, a mid end is lifted to q_pe
+    assert blend_mapq(150, 120, 100, 20, 50, 90, 0, 90, 0, 1) == (60, 60)
+    assert blend_mapq(150, 120, 100, 0, 50, 90, 0, 90, 0, 1) == (40, 60)
+    # weak pair evidence (q_pe = raw_mapq(3) = 18): only sub-18 ends move
+    assert blend_mapq(123, 120, 100, 0, 50, 90, 0, 90, 0, 1) == (18, 50)
+    # the unpaired alternative dominates sub_pair as the runner-up
+    assert blend_mapq(123, 0, 120, 0, 50, 90, 0, 90, 0, 1) == (18, 50)
+    # tandem-repeat cap: csub close to score caps the blended value
+    assert blend_mapq(150, 120, 100, 20, 50, 90, 88, 90, 0, 1) == (12, 60)
+    # q_pe <= 0 (runner-up as good as the winner): nothing is lifted
+    assert blend_mapq(120, 120, 100, 7, 50, 90, 0, 90, 0, 1) == (7, 50)
+
+
+def test_mapq_blend_only_touches_proper_mapq(world, pairs):
+    """The blend may only ever change the MAPQ column, only on proper
+    pairs, and only within [0, 60]; PEOptions(mapq_blend=False) restores
+    the legacy per-end MAPQ exactly."""
+    _, idx = world
+    r1, r2, _ = pairs
+    blended, _ = align_pairs_baseline(idx, r1, r2)
+    legacy, _ = align_pairs_baseline(idx, r1, r2,
+                                     pe_opt=PEOptions(mapq_blend=False))
+    assert len(blended) == len(legacy)
+    changed = 0
+    for lb, ll in zip(blended, legacy):
+        fb, fl = lb.split("\t"), ll.split("\t")
+        assert fb[:4] == fl[:4] and fb[5:] == fl[5:]
+        if fb[4] != fl[4]:
+            changed += 1
+            assert int(fb[1]) & 0x2          # only proper pairs blend
+            assert 0 <= int(fb[4]) <= 60
+    assert changed > 0
+
+
+def test_rescued_mate_gets_pair_aware_mapq(world, pairs):
+    """A rescued mate whose own placement evidence is weak (low SE-style
+    MAPQ: barely above the score threshold, sub-95% identity) must be
+    lifted by the pair evidence — the ROADMAP's 'rescued mates keep their
+    SE-style MAPQ' gap."""
+    ref, idx = world
+    r1, r2, _ = pairs
+    # craft one pair at insert 250: end1 exact (unique, MAPQ 60); end2's
+    # source keeps a clean 12-base anchor (>= rescue_min_seed 10, but
+    # < SMEM min_seed_len 19, so only rescue can place it) and carries a
+    # SNP every 7 bases after it, leaving a low-identity placement.
+    p = 31_000
+    end1 = ref[p:p + L].copy()
+    src = ref[p + 250 - L:p + 250].copy()
+    at = np.arange(14, L, 7)
+    src[at] = (src[at] + 1) % 4
+    end2 = (3 - src[::-1]).astype(np.uint8)          # FR: RC right end
+    r1x = np.concatenate([r1, end1[None]])
+    r2x = np.concatenate([r2, end2[None]])
+    blended, _ = align_pairs_baseline(idx, r1x, r2x)
+    legacy, _ = align_pairs_baseline(idx, r1x, r2x,
+                                     pe_opt=PEOptions(mapq_blend=False))
+    lb, ll = blended[-1], legacy[-1]
+    assert "XR:i:1" in lb and "XR:i:1" in ll        # placed by rescue
+    fb, fl = lb.split("\t"), ll.split("\t")
+    assert int(fb[1]) & 0x2                          # proper after rescue
+    assert int(fl[4]) < 60                           # weak SE-style MAPQ
+    assert int(fb[4]) > int(fl[4])                   # lifted by the pair
+    assert int(fb[4]) <= min(60, int(fl[4]) + 40)    # bounded by q_pe/+40
 
 
 def test_pestat_failure_fallback(world):
