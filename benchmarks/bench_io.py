@@ -1,0 +1,82 @@
+"""I/O subsystem benchmarks: FASTQ ingestion, streaming batcher and the
+on-disk index bundle.
+
+MUSIC/GateSeeder-style end-to-end mapping is gated as much by
+ingestion/chunking/dispatch as by the alignment kernels; these rows put
+numbers on the repo's own ingestion path: parse + encode + pad
+throughput (reads/s, plain vs gzip), the pair-synchronized streamer, and
+how much loading the persisted FM-index bundle saves over rebuilding it
+from FASTA.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import pathlib
+
+from .common import row, scaled, timeit, get_world  # noqa: F401  (path setup)
+
+import numpy as np  # noqa: E402
+
+from repro.core.contig import build_contig_index  # noqa: E402
+from repro.data import simulate_pairs_multi, simulate_reference  # noqa: E402
+from repro.data import write_fasta, write_fastq_pair  # noqa: E402
+from repro.io import (load_index, load_reference, read_fastq,  # noqa: E402
+                      save_index, stream_batches, stream_pair_batches)
+
+REF_N = scaled(200_000, 40_000)
+N_PAIRS = scaled(20_000, 2_000)
+READ_LEN = 101
+BATCH = 512
+
+
+def run() -> None:
+    with tempfile.TemporaryDirectory(prefix="repro_bench_io") as d:
+        d = pathlib.Path(d)
+        contigs = simulate_reference(REF_N, 3, seed=42)
+        r1, r2, _ = simulate_pairs_multi(contigs, N_PAIRS, READ_LEN, seed=7)
+
+        # ---- FASTA ingestion (plain vs gzip) ----
+        for suffix in ("fa", "fa.gz"):
+            fa = str(d / f"ref.{suffix}")
+            t_w = timeit(lambda: write_fasta(fa, contigs), repeat=2)
+            t_r = timeit(lambda: load_reference(fa), repeat=2)
+            row(f"io/fasta_write_{suffix}_s", round(t_w, 4))
+            row(f"io/fasta_load_{suffix}_s", round(t_r, 4),
+                f"{REF_N / t_r / 1e6:.1f} Mbp/s")
+
+        # ---- FASTQ ingestion + streaming batcher ----
+        for suffix in ("fq", "fq.gz"):
+            fq1 = str(d / f"reads_1.{suffix}")
+            fq2 = str(d / f"reads_2.{suffix}")
+            t_w = timeit(lambda: write_fastq_pair(fq1, fq2, r1, r2),
+                         repeat=2)
+            row(f"io/fastq_write_{suffix}_s", round(t_w, 4),
+                f"{2 * N_PAIRS / t_w:.0f} reads/s")
+            t_p = timeit(lambda: sum(1 for _ in read_fastq(fq1)), repeat=2)
+            row(f"io/fastq_parse_{suffix}_reads_s", round(N_PAIRS / t_p, 1))
+            t_s = timeit(lambda: sum(len(b) for b in
+                                     stream_batches(fq1, BATCH)), repeat=2)
+            row(f"io/stream_se_{suffix}_reads_s", round(N_PAIRS / t_s, 1),
+                "parse+encode+pad")
+            t_2 = timeit(lambda: sum(len(b) for b in
+                                     stream_pair_batches(fq1, fq2, BATCH)),
+                         repeat=2)
+            row(f"io/stream_pe_{suffix}_pairs_s", round(N_PAIRS / t_2, 1))
+
+        # ---- index bundle: save/load vs rebuild ----
+        fa = str(d / "ref.fa.gz")
+        t_build = timeit(lambda: build_contig_index(load_reference(fa)),
+                         repeat=1, warmup=0)
+        idx = build_contig_index(contigs)
+        prefix = str(d / "ref.fa.gz")
+        t_save = timeit(lambda: save_index(prefix, idx), repeat=2)
+        t_load = timeit(lambda: load_index(prefix), repeat=2)
+        row("io/index_build_s", round(t_build, 3))
+        row("io/index_save_s", round(t_save, 3))
+        row("io/index_load_s", round(t_load, 3),
+            f"{t_build / t_load:.1f}x faster than rebuild")
+
+
+if __name__ == "__main__":
+    run()

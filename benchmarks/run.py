@@ -21,7 +21,7 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe")
+    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe,io")
     ap.add_argument("--ci", action="store_true",
                     help="CI-smoke sizes for every suite")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -32,7 +32,7 @@ def main() -> None:
         os.environ["REPRO_BENCH_CI"] = "1"
     picks = set(args.only.split(","))
     from . import common, bench_smem, bench_sal, bench_bsw, bench_e2e, \
-        bench_scaling, bench_pe
+        bench_scaling, bench_pe, bench_io
     suites = {
         "smem": ("Table 4 (SMEM kernel)", bench_smem.run),
         "sal": ("Table 5 (SAL kernel)", bench_sal.run),
@@ -40,6 +40,7 @@ def main() -> None:
         "e2e": ("Figure 5 (end-to-end)", bench_e2e.run),
         "scaling": ("Figure 4 (scaling)", bench_scaling.run),
         "pe": ("PE mate rescue (scalar vs batched)", bench_pe.run),
+        "io": ("I/O subsystem (ingestion + index bundle)", bench_io.run),
     }
     print("name,value,derived")
     suite_s = {}

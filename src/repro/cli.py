@@ -1,0 +1,173 @@
+"""bwa-mem-shaped command-line front-end.
+
+Two subcommands, mirroring the tool the paper accelerates::
+
+    python -m repro.cli index ref.fa[.gz] [-p PREFIX]
+    python -m repro.cli mem  ref.fa reads_1.fq[.gz] [reads_2.fq[.gz]]
+                             [-o out.sam] [--interleaved] [--batch-size B]
+                             [--shard i/n] [--baseline-occ? no]
+
+``index`` ingests a (gzipped) multi-contig FASTA through
+``io.fasta.load_reference`` (IUPAC ambiguity -> seeded random base, as
+bwa does), builds the concatenated-contig FM-index and persists it as
+the versioned bundle of ``io.store`` next to the FASTA.
+
+``mem`` loads that bundle (building in-memory with a warning when it is
+missing), streams reads in fixed-size batches through ``io.stream`` and
+drives the paper's stage-major batched pipeline —
+``align_reads_optimized`` single-end, ``align_pairs_optimized`` paired
+(split or interleaved FASTQ) — writing SAM with proper ``@SQ``/``@PG``
+headers to a file or stdout.  ``--shard i/n`` keeps only every n-th
+read (pair), the ``repro.dist`` worker partition (defaults to this
+process's rank when running under a multi-process jax runtime).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+VERSION = "0.1.0"
+
+
+def _log(msg: str) -> None:
+    print(f"[repro.cli] {msg}", file=sys.stderr, flush=True)
+
+
+def _pg_line(argv: list[str]) -> str:
+    cl = " ".join(["repro.cli"] + list(argv))
+    return f"@PG\tID:repro\tPN:repro\tVN:{VERSION}\tCL:{cl}"
+
+
+def _load_or_build(ref: str):
+    """Index bundle at the FASTA prefix if present, else an in-memory
+    build (one-off runs; `index` persists it for every run after)."""
+    from .core.contig import build_contig_index
+    from .io.fasta import load_reference
+    from .io.store import have_index, load_index
+    if have_index(ref):
+        t0 = time.time()
+        idx = load_index(ref)
+        _log(f"loaded index bundle {ref}.ri.* "
+             f"(N={int(idx.N)}) in {time.time() - t0:.1f}s")
+        return idx
+    _log(f"no index bundle at {ref!r}; building in-memory "
+         f"(run `repro.cli index {ref}` to persist it)")
+    t0 = time.time()
+    idx = build_contig_index(load_reference(ref))
+    _log(f"built index (N={int(idx.N)}) in {time.time() - t0:.1f}s")
+    return idx
+
+
+def cmd_index(args, argv) -> int:
+    from .core.contig import build_contig_index
+    from .io.fasta import load_reference
+    from .io.store import save_index
+    t0 = time.time()
+    seed_kw = {} if args.ambig_seed is None else {"seed": args.ambig_seed}
+    contigs = load_reference(args.fasta, **seed_kw)
+    total = sum(len(a) for _, a in contigs)
+    _log(f"read {len(contigs)} contig(s), {total} bp from {args.fasta}")
+    idx = build_contig_index(contigs)
+    _log(f"built FM-index (N={int(idx.N)}) in {time.time() - t0:.1f}s")
+    prefix = args.prefix or args.fasta
+    jp, npzp = save_index(prefix, idx)
+    _log(f"wrote {jp} + {npzp}")
+    return 0
+
+
+def cmd_mem(args, argv) -> int:
+    import numpy as np  # noqa: F401  (pipeline dep; fail early if absent)
+
+    from .core.contig import sam_header
+    from .core.pipeline import (PipelineOptions, align_pairs_optimized,
+                                align_reads_optimized, to_sam)
+    from .dist.api import read_shard
+    from .io.stream import stream_batches, stream_pair_batches
+
+    paired = args.reads2 is not None or args.interleaved
+    shard = read_shard(args.shard)
+    if shard != (0, 1):
+        _log(f"streaming shard {shard[0]}/{shard[1]}")
+    idx = _load_or_build(args.ref)
+    opt = PipelineOptions()
+    out = sys.stdout if args.output in (None, "-") else open(args.output, "w")
+    t0 = time.time()
+    n_reads = n_lines = 0
+    try:
+        for ln in sam_header(idx, extra=[_pg_line(argv)]):
+            print(ln, file=out)
+        if paired:
+            batches = stream_pair_batches(
+                args.reads1, args.reads2, args.batch_size,
+                interleaved=args.interleaved, shard=shard)
+            for b in batches:
+                lines, _ = align_pairs_optimized(idx, b.reads1, b.reads2,
+                                                 opt, names=b.names)
+                for ln in lines:
+                    print(ln, file=out)
+                n_reads += 2 * len(b)
+                n_lines += len(lines)
+        else:
+            for b in stream_batches(args.reads1, args.batch_size,
+                                    shard=shard):
+                results, _ = align_reads_optimized(idx, b.reads, opt)
+                for ln in to_sam(b.reads, results, names=b.names, idx=idx):
+                    print(ln, file=out)
+                    n_lines += 1
+                n_reads += len(b)
+        out.flush()
+    finally:
+        if out is not sys.stdout:
+            out.close()
+    dt = max(time.time() - t0, 1e-9)
+    _log(f"aligned {n_reads} reads ({n_lines} SAM records) in {dt:.1f}s "
+         f"({n_reads / dt:.1f} reads/s)")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.cli",
+        description="bwa-mem-shaped front-end over the batched pipeline")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ix = sub.add_parser("index", help="build + persist the FM-index bundle")
+    ix.add_argument("fasta", help="reference FASTA (plain or .gz)")
+    ix.add_argument("-p", "--prefix", default=None,
+                    help="bundle prefix (default: the FASTA path)")
+    ix.add_argument("--ambig-seed", type=int, default=None,
+                    help="RNG seed for IUPAC-ambiguity replacement "
+                         "(default: io.fasta.REFERENCE_AMBIG_SEED, 11 — "
+                         "bwa's srand48 seed)")
+    ix.set_defaults(fn=cmd_index)
+
+    mm = sub.add_parser("mem", help="align FASTQ reads, emit SAM")
+    mm.add_argument("ref", help="index bundle prefix (or FASTA to build "
+                                "in-memory)")
+    mm.add_argument("reads1", help="FASTQ (plain or .gz)")
+    mm.add_argument("reads2", nargs="?", default=None,
+                    help="mate FASTQ for split paired-end input")
+    mm.add_argument("-o", "--output", default=None,
+                    help="output SAM path (default: stdout)")
+    mm.add_argument("-b", "--batch-size", type=int, default=512,
+                    help="reads (pairs) per pipeline batch; PE insert-size "
+                         "stats are per-batch, as in bwa (default 512)")
+    mm.add_argument("-p", "--interleaved", action="store_true",
+                    help="reads1 is interleaved R1/R2 (bwa mem -p)")
+    mm.add_argument("--shard", default=None, metavar="i/n",
+                    help="stream only shard i of n (default: this "
+                         "process's repro.dist rank, else everything)")
+    mm.set_defaults(fn=cmd_mem)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    args = build_parser().parse_args(argv)
+    return args.fn(args, argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,11 +64,34 @@ def build_contig_index(contigs) -> ContigIndex:
         raise ValueError("empty contig")
     offsets = np.concatenate([[0], np.cumsum(lengths)[:-1]])
     base = build_index(np.concatenate(arrs))
+    return with_contigs(base, names, offsets, lengths)
+
+
+def with_contigs(base: FMIndex, names, offsets, lengths) -> ContigIndex:
+    """Attach a contig table to a base ``FMIndex`` (serialization hook:
+    ``repro.io.store`` persists the table as JSON metadata and reattaches
+    it here on load; ``edges`` is derived from offsets + l_pac)."""
+    offsets = np.asarray(offsets, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    if not (len(names) == len(offsets) == len(lengths)):
+        raise ValueError("contig table fields disagree on contig count")
     fields = {f.name: getattr(base, f.name)
               for f in dataclasses.fields(FMIndex)}
-    return ContigIndex(**fields, names=names, offsets=offsets,
+    return ContigIndex(**fields, names=tuple(names), offsets=offsets,
                        lengths=lengths,
                        edges=make_edges(offsets, int(base.n_ref)))
+
+
+def contig_table(idx) -> dict | None:
+    """JSON-serializable contig metadata of ``idx`` (None for a plain
+    single-sequence FMIndex) — the store's counterpart of
+    ``with_contigs``."""
+    names = getattr(idx, "names", None)
+    if names is None:
+        return None
+    return {"names": list(names),
+            "offsets": [int(o) for o in idx.offsets],
+            "lengths": [int(ln) for ln in idx.lengths]}
 
 
 def make_edges(offsets: np.ndarray, l_pac: int) -> np.ndarray:

@@ -191,6 +191,34 @@ class FMIndex:
         return self._device
 
 
+# Fields persisted by the on-disk index bundle (repro.io.store); the occ
+# prefix oracle and the lazy device view are derived state, rebuilt on load.
+PERSIST_ARRAYS = ("seq", "sa", "bwt", "C", "occ32_counts", "occ32_bytes",
+                  "occ128_counts", "occ128_packed", "sa_sampled")
+PERSIST_SCALARS = ("n_ref", "N", "primary")
+
+
+def occ_prefix_from_bwt(bwt: np.ndarray) -> np.ndarray:
+    """(N+1, 4) Occ prefix table from the BWT bytes (the host oracle).
+
+    Shared by ``build_index`` and ``repro.io.store.load_index`` so a
+    loaded index is byte-identical to a freshly built one.
+    """
+    occ_prefix = np.zeros((len(bwt) + 1, 4), dtype=np.int64)
+    for c in range(4):
+        occ_prefix[1:, c] = np.cumsum(bwt == c)
+    return occ_prefix
+
+
+def index_from_arrays(arrays: dict, scalars: dict) -> FMIndex:
+    """Reassemble an ``FMIndex`` from its persisted arrays + scalars
+    (see ``PERSIST_ARRAYS``/``PERSIST_SCALARS``), rebuilding derived
+    state."""
+    return FMIndex(**{k: int(scalars[k]) for k in PERSIST_SCALARS},
+                   **{k: np.asarray(arrays[k]) for k in PERSIST_ARRAYS},
+                   _occ_prefix=occ_prefix_from_bwt(np.asarray(arrays["bwt"])))
+
+
 def build_index(ref: np.ndarray) -> FMIndex:
     """Build the full FM-index over S = ref + revcomp(ref).
 
@@ -219,9 +247,7 @@ def build_index(ref: np.ndarray) -> FMIndex:
         C[c] = C[c - 1] + counts[c - 1]
 
     # ---- occ prefix table (host oracle only; O(N) memory x4) ----
-    occ_prefix = np.zeros((N + 1, 4), dtype=np.int64)
-    for c in range(4):
-        occ_prefix[1:, c] = np.cumsum(bwt == c)
+    occ_prefix = occ_prefix_from_bwt(bwt)
 
     # ---- optimized layout: eta=32, one byte per base ----
     nb32 = N // OPT_ETA + 1

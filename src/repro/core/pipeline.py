@@ -48,6 +48,8 @@ class Alignment:
     sub: int = 0; csub: int = 0
     secondary: int = -1
     rescued: bool = False     # placed by PE mate rescue, not by seeding
+    frac_rep: float = 0.0     # read's repeat fraction (bwa frac_rep; the
+                              # PE MAPQ blend scales q_pe by it)
     # filled by finalize():
     pos: int = -1; is_rev: bool = False; mapq: int = 0
     cigar: list = dataclasses.field(default_factory=list)
@@ -313,7 +315,8 @@ class BatchedBSWExecutor:
 
 def mark_and_finalize(alns: list[Alignment], query: np.ndarray,
                       S: np.ndarray, l_pac: int, p: BSWParams,
-                      min_seed_len: int) -> list[Alignment]:
+                      min_seed_len: int,
+                      frep: float = 0.0) -> list[Alignment]:
     if not alns:
         return []
     alns = sorted(alns, key=lambda a: (-a.score, a.qb, a.rb))
@@ -342,6 +345,7 @@ def mark_and_finalize(alns: list[Alignment], query: np.ndarray,
             continue
         finalize_alignment(a, query, S, l_pac, p)
         a.mapq = approx_mapq(a, p, min_seed_len) if a.secondary < 0 else 0
+        a.frac_rep = frep      # per-read, carried on every region like bwa
         out.append(a)
     return out
 
@@ -429,6 +433,7 @@ def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
     for r in range(len(reads)):
         q = reads[r]
         mems = smem_mod.collect_smems(idx, q, opt.mem)
+        frep = smem_mod.frac_rep(mems, len(q), opt.mem.max_occ)
         # SAL (compressed baseline, one lookup at a time)
         seeds = []
         for (k, l, s, qb, qe) in mems:
@@ -458,7 +463,7 @@ def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
             alns.extend(chain2aln(c, q, idx, opt.bsw, counting_fn))
         stats["bsw_tasks"] += counting[0]
         results.append(mark_and_finalize(alns, q, S, l_pac, opt.bsw,
-                                         opt.mem.min_seed_len))
+                                         opt.mem.min_seed_len, frep=frep))
     return results, stats
 
 
@@ -496,8 +501,9 @@ def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
         for ci, c in enumerate(chains_per_read[r]):
             alns.extend(chain2aln(c, reads[r], idx, opt.bsw,
                                   execu.executor((r, ci))))
+        frep = smem_mod.frac_rep(mems[r], L, opt.mem.max_occ)
         results.append(mark_and_finalize(alns, reads[r], S, l_pac, opt.bsw,
-                                         opt.mem.min_seed_len))
+                                         opt.mem.min_seed_len, frep=frep))
     stats = dict(sa_lookups=n_lookups, bsw_tasks=execu.stats["tasks"],
                  cells_useful=execu.stats["cells_useful"],
                  cells_total=execu.stats["cells_total"])

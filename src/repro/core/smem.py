@@ -161,6 +161,25 @@ def collect_smems(idx: FMIndex, q: np.ndarray, opt: MemOptions):
     return mem
 
 
+def frac_rep(mems, l_query: int, max_occ: int) -> float:
+    """bwa mem_chain's per-read repeat fraction: the fraction of the read
+    covered by SMEMs whose interval size exceeds ``max_occ`` (union of
+    query spans, walked in the collectors' sorted (qbeg, qend) order).
+    Feeds the q_pe scaling term of the pair-aware MAPQ blend
+    (``pe.pairing.blend_mapq``)."""
+    b = e = l_rep = 0
+    for (k, l, s, qb, qe) in mems:
+        if s <= max_occ:
+            continue
+        if qb > e:
+            l_rep += e - b
+            b, e = qb, qe
+        else:
+            e = max(e, qe)
+    l_rep += e - b
+    return l_rep / l_query if l_query else 0.0
+
+
 def brute_smems(idx: FMIndex, q: np.ndarray):
     """Brute-force SMEMs by definition (tests only): strictly-increasing
     records of E(s) = longest exact match starting at s."""

@@ -40,6 +40,47 @@ def revcomp_read(read: np.ndarray) -> np.ndarray:
     return out
 
 
+def write_fasta(path, contigs, *, width: int = 60) -> None:
+    """Export simulator contigs — (name, codes) pairs from
+    ``simulate_reference``, or a bare codes array — as FASTA (gzip on
+    ``.gz``), so every simulated workload can be re-ingested through
+    ``repro.io`` / ``repro.cli`` as a real file."""
+    from ..io.fasta import write_fasta as _write
+    if isinstance(contigs, np.ndarray):
+        contigs = [("ref", contigs)]
+    _write(path, [(name, decode(np.asarray(codes))) for name, codes in
+                  contigs], width=width)
+
+
+def write_fastq(path, reads, names=None, *, quals=None) -> None:
+    """Export simulated reads — an (R, L) codes array or list of code
+    arrays — as FASTQ (gzip on ``.gz``).
+
+    ``names`` defaults to ``read{i}``; ``quals`` (same shape of strings)
+    defaults to a constant Q40 line, since the simulators model errors
+    but not quality scores."""
+    from ..io.fastq import FastqRecord, write_fastq as _write
+
+    def records():
+        for i, codes in enumerate(reads):
+            seq = decode(np.asarray(codes))
+            name = names[i] if names is not None else f"read{i}"
+            qual = quals[i] if quals is not None else "I" * len(seq)
+            yield FastqRecord(str(name), seq, qual)
+
+    _write(path, records())
+
+
+def write_fastq_pair(path1, path2, reads1, reads2, names=None) -> None:
+    """Export mate arrays as synchronized R1/R2 FASTQ files with the
+    conventional ``/1``/``/2`` name suffixes (QNAME defaults to
+    ``pair{i}``, matching the in-memory PE drivers)."""
+    base = [str(names[i]) if names is not None else f"pair{i}"
+            for i in range(len(reads1))]
+    write_fastq(path1, reads1, names=[f"{b}/1" for b in base])
+    write_fastq(path2, reads2, names=[f"{b}/2" for b in base])
+
+
 def make_reference(n: int, *, seed: int = 0, repeat_frac: float = 0.3,
                    repeat_len: int = 200) -> np.ndarray:
     """Random genome with planted repeats.

@@ -68,6 +68,35 @@ def batch_mesh_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def read_shard(spec: str | None = None) -> tuple[int, int]:
+    """This worker's ``(shard_index, shard_count)`` slice of a FASTQ.
+
+    Resolution order: an explicit ``"i/n"`` spec (the ``repro.cli mem
+    --shard`` flag, also how a launcher pins ranks) wins; otherwise a
+    multi-process jax runtime supplies (process_index, process_count);
+    single-process falls back to ``(0, 1)`` — the whole file.  The tuple
+    plugs straight into ``repro.io.stream``'s ``shard=`` filter, whose
+    global-ordinal partition is deterministic and batch-size-independent,
+    so n workers each streaming shard (i, n) of one FASTQ cover every
+    read exactly once with no coordination.
+    """
+    if spec:
+        try:
+            i_s, n_s = spec.split("/")
+            i, n = int(i_s), int(n_s)
+        except ValueError:
+            raise ValueError(f"bad shard spec {spec!r}: expected 'i/n'")
+        if not 0 <= i < n:
+            raise ValueError(f"bad shard spec {spec!r}: need 0 <= i < n")
+        return i, n
+    try:
+        n = jax.process_count()
+        i = jax.process_index()
+    except Exception:               # uninitialized backend: act unsharded
+        return 0, 1
+    return (i, n) if n > 1 else (0, 1)
+
+
 def constrain(x, *axes):
     """Sharding constraint by logical axis name per array dim.
 

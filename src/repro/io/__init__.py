@@ -1,0 +1,21 @@
+"""Real-genomics I/O subsystem: FASTA/FASTQ ingestion, on-disk index
+bundles and streaming read batchers.
+
+This layer is what turns the reproduction into a bwa-mem-shaped *tool*
+(``repro.cli index`` / ``repro.cli mem``): references come from (possibly
+gzipped) FASTA files instead of the simulators, the FM-index is built
+once and persisted (``bwa index`` equivalent, see ``store.py``), and
+reads stream from FASTQ in fixed-size, length-padded batches sized for
+the batched SMEM/BSW stages — optionally sharded ``(i, n)`` across
+``repro.dist`` workers.
+"""
+
+from .fasta import (load_reference, read_fasta, write_fasta,  # noqa: F401
+                    encode_reference)
+from .fastq import (FastqRecord, encode_read, pair_qname,  # noqa: F401
+                    read_fastq, read_fastq_interleaved, read_fastq_paired,
+                    write_fastq)
+from .store import (INDEX_VERSION, have_index, index_paths,  # noqa: F401
+                    load_index, save_index)
+from .stream import (PairBatch, ReadBatch, stream_batches,  # noqa: F401
+                     stream_pair_batches)

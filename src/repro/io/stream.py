@@ -1,0 +1,144 @@
+"""Chunked streaming batch reader for the stage-major pipeline.
+
+The optimized drivers (``align_reads_optimized`` /
+``align_pairs_optimized``) want rectangular (B, L) uint8 batches — the
+whole point of the paper's reorganisation is running each stage over a
+big batch.  This module turns a FASTQ stream into exactly that shape:
+
+* fixed-size batches (the last one ragged), sequences length-padded with
+  the ambiguity code 4, true lengths carried alongside (trailing pad
+  bases seed nothing and soft-clip out, so equal-length Illumina input —
+  the common case — is bit-exact, and mixed lengths degrade gracefully);
+* synchronized R1/R2 pair batches from split or interleaved FASTQ, with
+  the shared pair QNAME extracted per pair;
+* a deterministic ``shard=(i, n)`` filter that keeps every record (pair)
+  whose GLOBAL ordinal is ``i (mod n)`` — the same partition no matter
+  the batch size, which is what lets ``repro.dist`` workers each stream
+  their slice of one FASTQ with no coordination beyond rank/world-size
+  (see ``repro.dist.api.read_shard``).
+
+Like bwa (which processes reads in ~10 Mbp chunks and estimates the
+insert-size distribution per chunk), the PE statistics downstream are
+per-batch: pick ``batch_size`` large enough for stable estimates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from .fastq import (encode_read, pair_qname, read_fastq,
+                    read_fastq_interleaved, read_fastq_paired)
+
+PAD_CODE = 4                        # ambiguity code: seeds nothing, clips out
+
+
+@dataclasses.dataclass
+class ReadBatch:
+    names: list
+    reads: np.ndarray               # (B, Lmax) uint8, padded with PAD_CODE
+    lens: np.ndarray                # (B,) int64 true lengths
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+@dataclasses.dataclass
+class PairBatch:
+    names: list                     # shared per-pair QNAMEs
+    reads1: np.ndarray              # (B, Lmax) uint8
+    reads2: np.ndarray
+    lens1: np.ndarray
+    lens2: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def check_shard(shard) -> tuple[int, int] | None:
+    if shard is None:
+        return None
+    i, n = int(shard[0]), int(shard[1])
+    if not 0 <= i < n:
+        raise ValueError(f"bad shard {shard}: need 0 <= i < n")
+    return (i, n)
+
+
+def _sharded(it, shard):
+    """Keep items whose global ordinal == i (mod n)."""
+    if shard is None:
+        yield from it
+        return
+    i, n = shard
+    for ordinal, item in enumerate(it):
+        if ordinal % n == i:
+            yield item
+
+
+def _pack(seqs: list[str], width: int | None = None
+          ) -> tuple[np.ndarray, np.ndarray]:
+    """Encode + right-pad a list of read strings to one (B, width) array
+    (width defaults to the batch max length)."""
+    lens = np.array([len(s) for s in seqs], dtype=np.int64)
+    L = int(lens.max(initial=1)) if width is None else width
+    out = np.full((len(seqs), L), PAD_CODE, dtype=np.uint8)
+    for r, s in enumerate(seqs):
+        out[r, :len(s)] = encode_read(s)
+    return out, lens
+
+
+def stream_batches(path, batch_size: int = 512, *,
+                   shard=None) -> Iterator[ReadBatch]:
+    """Single-end FASTQ -> fixed-size padded ``ReadBatch``es."""
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    shard = check_shard(shard)
+    names: list[str] = []
+    seqs: list[str] = []
+    for rec in _sharded(read_fastq(path), shard):
+        names.append(rec.name)
+        seqs.append(rec.seq)
+        if len(names) == batch_size:
+            reads, lens = _pack(seqs)
+            yield ReadBatch(names, reads, lens)
+            names, seqs = [], []
+    if names:
+        reads, lens = _pack(seqs)
+        yield ReadBatch(names, reads, lens)
+
+
+def stream_pair_batches(path1, path2=None, batch_size: int = 512, *,
+                        interleaved: bool = False,
+                        shard=None) -> Iterator[PairBatch]:
+    """Paired FASTQ (split R1/R2 files, or one interleaved file) ->
+    synchronized ``PairBatch``es; ``shard`` partitions by PAIR ordinal so
+    mates never land on different workers."""
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    if interleaved and path2 is not None:
+        raise ValueError("interleaved input takes a single FASTQ")
+    shard = check_shard(shard)
+    pairs = (read_fastq_interleaved(path1) if interleaved
+             else read_fastq_paired(path1, path2))
+    names: list[str] = []
+    s1: list[str] = []
+    s2: list[str] = []
+    def flush():
+        # ONE width across both ends: the PE driver stacks R1 and R2 into
+        # a single (2B, L) batch, so per-side maxima must agree
+        w = max(max(map(len, s1)), max(map(len, s2)))
+        reads1, lens1 = _pack(s1, w)
+        reads2, lens2 = _pack(s2, w)
+        return PairBatch(list(names), reads1, reads2, lens1, lens2)
+
+    for r1, r2 in _sharded(pairs, shard):
+        names.append(pair_qname(r1.name, r2.name))
+        s1.append(r1.seq)
+        s2.append(r2.seq)
+        if len(names) == batch_size:
+            yield flush()
+            names, s1, s2 = [], [], []
+    if names:
+        yield flush()

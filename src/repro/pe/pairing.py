@@ -80,19 +80,23 @@ def select_pair(regs1: list, regs2: list, pes: list[PairStat], idx,
 
 def blend_mapq(q_pair: int, sub_pair: int, score_un: int, mapq1: int,
                mapq2: int, score1: int, csub1: int, score2: int,
-               csub2: int, a_match: int) -> tuple[int, int]:
+               csub2: int, a_match: int, frac_rep1: float = 0.0,
+               frac_rep2: float = 0.0) -> tuple[int, int]:
     """mem_sam_pe's pair-aware MAPQ: blend each end's SE MAPQ with the
     pair-level MAPQ ``q_pe``.
 
     q_pe scores the winning pair against the runner-up hypothesis (second
-    best pair OR the unpaired alternative, whichever is stronger); an end
-    whose SE MAPQ is below q_pe is lifted to min(q_pe, q_se + 40), then
-    capped by the tandem-repeat raw MAPQ of its own alignment.  (bwa also
-    scales q_pe by 1 - (frac_rep1 + frac_rep2)/2; this pipeline does not
-    track per-read repeat fractions, i.e. frac_rep == 0.)
+    best pair OR the unpaired alternative, whichever is stronger), scaled
+    down by ``1 - (frac_rep1 + frac_rep2)/2`` — the two ends' repeat
+    fractions from the SMEM stage (``core.smem.frac_rep``): pair evidence
+    from repeat-dominated reads is discounted, since an insert-consistent
+    placement inside a repeat array says little.  An end whose SE MAPQ is
+    below q_pe is lifted to min(q_pe, q_se + 40), then capped by the
+    tandem-repeat raw MAPQ of its own alignment.
     """
     subo = max(sub_pair, score_un)
     q_pe = min(max(raw_mapq(q_pair - subo, a_match), 0), 60)
+    q_pe = int(q_pe * (1.0 - 0.5 * (frac_rep1 + frac_rep2)) + 0.499)
     out = []
     for q_se, score, csub in ((mapq1, score1, csub1),
                               (mapq2, score2, csub2)):
@@ -125,9 +129,13 @@ def emit_pair(qname: str, read1, read2, regs1: list, regs2: list,
             if sel[2] > score_un:
                 a1, a2, proper = sel[0], sel[1], True
                 if mapq_blend:
+                    # frac_rep of each end's BEST region (bwa reads
+                    # a[i].a[0].frac_rep, not the winning pair's region)
                     m1, m2 = blend_mapq(
                         sel[2], sel[3], score_un, a1.mapq, a2.mapq,
-                        a1.score, a1.csub, a2.score, a2.csub, a_match)
+                        a1.score, a1.csub, a2.score, a2.csub, a_match,
+                        frac_rep1=getattr(b1, "frac_rep", 0.0),
+                        frac_rep2=getattr(b2, "frac_rep", 0.0))
                     # emit blended copies: the caller's result lists keep
                     # their SE MAPQ (the blend is not idempotent)
                     a1 = dataclasses.replace(a1, mapq=m1)

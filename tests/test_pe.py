@@ -4,6 +4,8 @@ the acceptance bar that ``align_pairs_baseline`` and
 ``align_pairs_optimized`` emit byte-identical SAM on 256+ simulated pairs
 with rescued and unpaired reads in the mix."""
 
+import copy
+
 import numpy as np
 import pytest
 
@@ -11,10 +13,11 @@ from repro.core import fmindex as fmx
 from repro.core.pipeline import (PipelineOptions, align_pairs_baseline,
                                  align_pairs_optimized,
                                  align_reads_optimized)
+from repro.core.smem import MemOptions, frac_rep
 from repro.data import make_reference, simulate_pairs
 from repro.pe import (PEOptions, blend_mapq, estimate_pestat, infer_dir,
-                      plan_rescues, raw_mapq, run_rescues_batched,
-                      run_rescues_scalar)
+                      pair_pipeline, plan_rescues, raw_mapq,
+                      run_rescues_batched, run_rescues_scalar)
 
 N_PAIRS = 256
 MEAN, STD, L = 250.0, 25.0, 101
@@ -222,6 +225,72 @@ def test_rescued_mate_gets_pair_aware_mapq(world, pairs):
     assert int(fl[4]) < 60                           # weak SE-style MAPQ
     assert int(fb[4]) > int(fl[4])                   # lifted by the pair
     assert int(fb[4]) <= min(60, int(fl[4]) + 40)    # bounded by q_pe/+40
+
+
+def test_frac_rep_union_of_heavy_smems():
+    """bwa mem_chain's l_rep walk: only intervals with s > max_occ count,
+    overlapping query spans merge."""
+    mems = [(0, 0, 600, 10, 50), (0, 0, 100, 40, 80), (0, 0, 501, 45, 90)]
+    assert frac_rep(mems, 100, 500) == pytest.approx(0.8)   # [10,50)+[45,90)
+    assert frac_rep(mems, 100, 700) == 0.0                  # nothing heavy
+    assert frac_rep([], 100, 500) == 0.0
+    assert frac_rep([(0, 0, 501, 0, 100)], 100, 500) == 1.0
+
+
+def test_blend_mapq_frac_rep_scales_q_pe():
+    """The q_pe scaling term: repeat fractions discount the pair evidence
+    (q_pe *= 1 - (f1+f2)/2) BEFORE the per-end lift, so repeat-heavy ends
+    are lifted less; frac_rep=0 reproduces the unscaled pins."""
+    # unscaled baseline (cf. test_mapq_blend_pinned_values): q_pe=60
+    assert blend_mapq(150, 120, 100, 20, 5, 90, 0, 90, 0, 1) == (60, 45)
+    # one fully repetitive end: q_pe -> 30; both ends now capped by it
+    assert blend_mapq(150, 120, 100, 20, 5, 90, 0, 90, 0, 1,
+                      0.0, 1.0) == (30, 30)
+    # both ends fully repetitive: q_pe -> 0, nothing is lifted
+    assert blend_mapq(150, 120, 100, 20, 5, 90, 0, 90, 0, 1,
+                      1.0, 1.0) == (20, 5)
+    # explicit zero == default
+    assert blend_mapq(150, 120, 100, 0, 50, 90, 0, 90, 0, 1,
+                      0.0, 0.0) == (40, 60)
+
+
+def test_repeat_heavy_mate_lowers_blended_mapq(world):
+    """End-to-end frac_rep: a mate seeded inside a tandem-repeat array
+    gets frac_rep=1 from the SMEM stage and its pair-blended MAPQ comes
+    out LOWER than the identical alignments with the repeat fractions
+    erased (the pre-frac_rep behaviour)."""
+    motif = np.resize(np.array([0, 1, 2, 3, 1, 0, 3, 2, 2, 1, 3, 0, 0, 2,
+                                1, 3, 3, 0, 1, 2, 3, 1, 0], np.uint8), 23)
+    ref = make_reference(12_000, seed=21, repeat_frac=0.0)
+    ref[8000:8170] = np.resize(motif, 170)      # 23-periodic tandem array
+    idx = fmx.build_index(ref)
+    # low max_occ so the tiny array already counts as "repeat-heavy"
+    opt = PipelineOptions(mem=MemOptions(max_occ=3))
+    r1, r2, _ = simulate_pairs(ref, 64, L, insert_mean=300, insert_std=30,
+                               seed=23, snp_rate=0.0, n_rate=0.0)
+    # crafted FR pair, insert 300: end2 is the array's first read-length
+    # window (4 equal placements -> frac_rep 1), end1 unique downstream
+    end2 = ref[8000:8000 + L].copy()
+    end1 = (3 - ref[8199:8199 + L][::-1]).astype(np.uint8)
+    r1x = np.concatenate([r1, end1[None]])
+    r2x = np.concatenate([r2, end2[None]])
+    n = len(r1x)
+    res, _ = align_reads_optimized(idx, np.concatenate([r1x, r2x]), opt)
+    res1, res2 = res[:n], res[n:]
+    assert res2[-1][0].frac_rep == 1.0          # populated by the pipeline
+    assert res1[-1][0].frac_rep == 0.0
+    # control: same alignments, repeat fractions erased
+    res1z, res2z = copy.deepcopy(res1), copy.deepcopy(res2)
+    for alns in res1z + res2z:
+        for a in alns:
+            a.frac_rep = 0.0
+    lines, _ = pair_pipeline(idx, r1x, r2x, res1, res2, opt, batched=True)
+    linesz, _ = pair_pipeline(idx, r1x, r2x, res1z, res2z, opt,
+                              batched=True)
+    f2, f2z = lines[-1].split("\t"), linesz[-1].split("\t")
+    assert int(f2[1]) & 0x2                     # crafted pair is proper
+    assert f2[:4] == f2z[:4] and f2[5:] == f2z[5:]
+    assert int(f2[4]) < int(f2z[4])             # repeat discount applied
 
 
 def test_pestat_failure_fallback(world):
