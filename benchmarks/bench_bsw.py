@@ -12,15 +12,14 @@ import numpy as np
 from .common import get_world, scaled, timeit, row
 from repro.core.bsw import (BSWParams, bsw_extend, bsw_extend_batch,
                             sort_tasks_by_length, wasted_cell_stats)
-from repro.core.pipeline import BatchedBSWExecutor, PipelineOptions, \
-    align_reads_optimized
+from repro.api import Aligner
+from repro.core.pipeline import BatchedBSWExecutor
 
 
 def intercept_tasks(idx, reads, n_reads=None):
     """Run SMEM->SAL->CHAIN and collect every BSW task the extension stage
     plans (query, target, h0)."""
     n_reads = n_reads or scaled(96, 24)
-    opt = PipelineOptions()
     captured = []
     orig = BatchedBSWExecutor._run
 
@@ -32,7 +31,7 @@ def intercept_tasks(idx, reads, n_reads=None):
 
     BatchedBSWExecutor._run = spy
     try:
-        align_reads_optimized(idx, reads[:n_reads], opt)
+        Aligner.from_index(idx).align(reads[:n_reads])
     finally:
         BatchedBSWExecutor._run = orig
     return captured

@@ -18,11 +18,15 @@ from .common import row, scaled, timeit, get_world  # noqa: F401  (path setup)
 
 import numpy as np  # noqa: E402
 
+import io  # noqa: E402
+
+from repro.api import Aligner  # noqa: E402
 from repro.core.contig import build_contig_index  # noqa: E402
 from repro.data import simulate_pairs_multi, simulate_reference  # noqa: E402
 from repro.data import write_fasta, write_fastq_pair  # noqa: E402
-from repro.io import (load_index, load_reference, read_fastq,  # noqa: E402
-                      save_index, stream_batches, stream_pair_batches)
+from repro.io import (load_index, load_reference, open_batches,  # noqa: E402
+                      read_fastq, save_index, stream_batches,
+                      stream_pair_batches)
 
 REF_N = scaled(200_000, 40_000)
 N_PAIRS = scaled(20_000, 2_000)
@@ -76,6 +80,22 @@ def run() -> None:
         row("io/index_save_s", round(t_save, 3))
         row("io/index_load_s", round(t_load, 3),
             f"{t_build / t_load:.1f}x faster than rebuild")
+
+        # ---- file -> SAM through the Aligner facade (streamed) ----
+        n_aln = scaled(192, 48)
+        fq1s, fq2s = str(d / "aln_1.fq"), str(d / "aln_2.fq")
+        write_fastq_pair(fq1s, fq2s, r1[:n_aln], r2[:n_aln])
+        al = Aligner.from_index(idx)
+
+        box = {}
+
+        def _stream():
+            box["summary"] = al.stream_sam(
+                open_batches(fq1s, fq2s, batch_size=BATCH), io.StringIO())
+
+        t_map = timeit(_stream, repeat=1, warmup=0)
+        row("io/stream_sam_pairs_per_s", round(n_aln / t_map, 1),
+            f"{box['summary']['n_records']} records via Aligner.stream_sam")
 
 
 if __name__ == "__main__":

@@ -13,10 +13,9 @@ from .common import row, timeit
 
 import numpy as np  # noqa: E402
 
+from repro.api import Aligner  # noqa: E402
 from repro.core import fmindex as fmx  # noqa: E402
-from repro.core.pipeline import (PipelineOptions,  # noqa: E402
-                                 align_pairs_optimized,
-                                 align_reads_optimized)
+from repro.core.pipeline import PipelineOptions  # noqa: E402
 from repro.data import make_reference, simulate_pairs  # noqa: E402
 from repro.pe import (PEOptions, estimate_pestat, plan_rescues,  # noqa: E402
                       run_rescues_batched, run_rescues_scalar)
@@ -34,7 +33,8 @@ def run() -> None:
     r1, r2, _ = simulate_pairs(ref, N_PAIRS, READ_LEN, insert_mean=300,
                                insert_std=30, seed=9, burst_frac=0.5)
     n = len(r1)
-    res, _ = align_reads_optimized(idx, np.concatenate([r1, r2]))
+    al = Aligner.from_index(idx)
+    res = al.align(np.concatenate([r1, r2])).alignments
     res1, res2 = res[:n], res[n:]
     opt = PipelineOptions()
     pes = estimate_pestat(res1, res2, idx)
@@ -58,7 +58,7 @@ def run() -> None:
         util = st["rescue_cells_useful"] / st["rescue_cells_total"]
         row("pe_rescue_cell_util", f"{util:.3f}", "useful/computed DP cells")
 
-    t_e2e = timeit(lambda: align_pairs_optimized(idx, r1, r2), repeat=1,
+    t_e2e = timeit(lambda: al.align_pairs(r1, r2), repeat=1,
                    warmup=1)
     row("pe_e2e_optimized_s", f"{t_e2e:.2f}", f"{N_PAIRS / t_e2e:.1f} pairs/s")
 

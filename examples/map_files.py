@@ -42,10 +42,14 @@ t0 = time.time()
 cli.main(["index", fa])
 print(f"indexed in {time.time() - t0:.1f}s")
 t0 = time.time()
-cli.main(["mem", fa, fq1, fq2, "-o", sam])
+cli.main(["mem", fa, fq1, fq2, "-o", sam,
+          "-R", r"@RG\tID:demo\tSM:simulated"])
 print(f"mapped in {time.time() - t0:.1f}s -> {sam}")
 
+header = [ln.rstrip("\n") for ln in open(sam) if ln.startswith("@")]
 lines = [ln.rstrip("\n") for ln in open(sam) if not ln.startswith("@")]
+assert any(ln.startswith("@RG\tID:demo") for ln in header)
+assert all("\tRG:Z:demo" in ln for ln in lines)
 ok = 0
 for pid in range(n_pairs):
     f1 = lines[2 * pid].split("\t")

@@ -1,11 +1,12 @@
 """Paired-end read-mapping demo over a MULTI-CONTIG reference.
 
 Simulates a 3-chromosome reference, builds one FM-index over the
-concatenation (bwa's .pac layout), aligns FR pairs stage-major
-(including "burst" mates that SMEM seeding cannot place), estimates the
-insert-size distribution, rescues unmapped mates through the batched BSW
-executor and emits pair-aware SAM with @SQ header lines, per-contig
-RNAME/POS and RNEXT ``=`` only for same-contig mates.
+concatenation (bwa's .pac layout), aligns FR pairs stage-major through
+the ``Aligner`` facade (including "burst" mates that SMEM seeding cannot
+place), estimates the insert-size distribution, rescues unmapped mates
+through the batched BSW executor and emits pair-aware SAM with @SQ
+header lines, per-contig RNAME/POS and RNEXT ``=`` only for same-contig
+mates.
 
   PYTHONPATH=src python examples/map_pairs.py [n_pairs]
 """
@@ -15,8 +16,8 @@ import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import build_contig_index, sam_header
-from repro.core.pipeline import align_pairs_optimized
+from repro.api import Aligner
+from repro.core import build_contig_index
 from repro.data import simulate_pairs_multi, simulate_reference
 
 n_pairs = int(sys.argv[1]) if len(sys.argv) > 1 else 128
@@ -24,15 +25,16 @@ contigs = simulate_reference(200_000, 3, seed=3)
 print("building index over 3-contig reference "
       f"({', '.join(f'{n}:{len(a)}' for n, a in contigs)}) ...")
 t0 = time.time()
-idx = build_contig_index(contigs)
-print(f"  index built in {time.time()-t0:.1f}s (N={idx.N})")
+al = Aligner.from_index(build_contig_index(contigs))
+print(f"  index built in {time.time()-t0:.1f}s (N={al.index.N})")
 reads1, reads2, truth = simulate_pairs_multi(contigs, n_pairs, 151,
                                              insert_mean=350, insert_std=35,
                                              seed=4, burst_frac=0.1)
 
 t0 = time.time()
-lines, stats = align_pairs_optimized(idx, reads1, reads2)
+res = al.align_pairs(reads1, reads2)
 t_total = time.time() - t0
+lines, stats = res.sam(), res.stats
 print(f"aligned {n_pairs} pairs in {t_total:.2f}s "
       f"({n_pairs / t_total:.1f} pairs/s)")
 print(f"insert-size estimate (FR): avg={stats['pes_avg'][1]:.1f} "
@@ -44,19 +46,19 @@ print(f"proper pairs: {stats['n_proper']}/{n_pairs}")
 # truth recovery: both ends on the right contig at the simulated loci
 ok = 0
 per_contig = {n: 0 for n, _ in contigs}
+recs = res.records()
 for pid in range(n_pairs):
-    f1 = lines[2 * pid].split("\t")
-    f2 = lines[2 * pid + 1].split("\t")
-    if int(f1[1]) & 0x4 or int(f2[1]) & 0x4:
+    r1, r2 = recs[2 * pid], recs[2 * pid + 1]
+    if r1.is_unmapped or r2.is_unmapped:
         continue
     want = truth["name"][pid]
-    if (f1[2] == f2[2] == want and
-            abs(int(f1[3]) - 1 - truth["pos1"][pid]) <= 12 and
-            abs(int(f2[3]) - 1 - truth["pos2"][pid]) <= 12):
+    if (r1.rname == r2.rname == want and
+            abs(r1.pos - truth["pos1"][pid]) <= 12 and
+            abs(r2.pos - truth["pos2"][pid]) <= 12):
         ok += 1
         per_contig[want] += 1
 print(f"both ends on the simulated contig+locus: {ok}/{n_pairs} "
       f"({', '.join(f'{n}:{c}' for n, c in per_contig.items())})")
 print("\nSAM header + first two pairs:")
-for ln in sam_header(idx) + lines[:4]:
+for ln in al.sam_header() + lines[:4]:
     print(" ", ln)

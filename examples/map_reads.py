@@ -13,17 +13,18 @@ import time
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
+from repro.api import Aligner
 from repro.core import build_index
 from repro.core import smem as sm
 from repro.core.sal import seeds_from_intervals
-from repro.core.pipeline import align_reads_optimized, to_sam
 from repro.data import make_reference, simulate_reads
 
 n_reads = int(sys.argv[1]) if len(sys.argv) > 1 else 64
 print("building index over 200k-base reference ...")
 ref = make_reference(200_000, seed=3)
 t0 = time.time()
-idx = build_index(ref)
+al = Aligner.from_index(build_index(ref))
+idx = al.index
 print(f"  index built in {time.time()-t0:.1f}s (N={idx.N})")
 reads, truth = simulate_reads(ref, n_reads, 151, seed=4)
 lens = np.full(n_reads, 151, np.int64)
@@ -35,10 +36,11 @@ t0 = time.time()
 seeds, n_lookups = seeds_from_intervals(idx, mems, 500)
 t_sal = time.time() - t0
 t0 = time.time()
-res, stats = align_reads_optimized(idx, reads)
+res = al.align(reads)
 t_total = time.time() - t0
 print(f"SMEM: {t_smem:.2f}s  SAL: {t_sal:.3f}s ({n_lookups} lookups)  "
       f"full pipeline: {t_total:.2f}s")
 hits = sum(1 for r in range(n_reads)
-           if res[r] and abs(res[r][0].pos - truth['pos'][r]) <= 12)
+           if res.alignments[r] and
+           abs(res.alignments[r][0].pos - truth['pos'][r]) <= 12)
 print(f"primary alignments at simulated locus: {hits}/{n_reads}")

@@ -1,4 +1,4 @@
-"""Quickstart: build an index, map reads, verify identical output.
+"""Quickstart: one Aligner, two engines, identical output.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,25 +7,25 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import numpy as np
+from repro.api import Aligner, engines
 from repro.core import build_index
-from repro.core.pipeline import (align_reads_baseline,
-                                 align_reads_optimized, to_sam)
 from repro.data import make_reference, simulate_reads
 
 ref = make_reference(30_000, seed=1)
-idx = build_index(ref)
 reads, truth = simulate_reads(ref, 12, 101, seed=2)
 
-opt, stats = align_reads_optimized(idx, reads)
-base, _ = align_reads_baseline(idx, reads)
-sam = to_sam(reads, opt)
-assert sam == to_sam(reads, base), "outputs must be identical (paper §1)"
+al = Aligner.from_index(build_index(ref))
+opt = al.align(reads)                       # default engine: "batched"
+base = al.align(reads, engine="baseline")   # original bwa-mem organisation
+assert opt.sam() == base.sam(), "outputs must be identical (paper §1)"
 
+stats = opt.stats
+print(f"engines: {', '.join(engines())}")
 print(f"mapped {len(reads)} reads; {stats['bsw_tasks']} BSW tasks, "
       f"{stats['sa_lookups']} SA lookups")
 print(f"lane efficiency (useful/computed DP cells): "
       f"{stats['cells_useful']/stats['cells_total']:.2f}")
-for line in sam[:6]:
-    print(line)
-print("baseline == optimized output: OK")
+for rec in opt.records()[:6]:
+    print(f"  {rec.qname}\tflag={rec.flag}\t{rec.rname}:{rec.pos}"
+          f"\tmapq={rec.mapq}\t{rec.cigar}\tAS={rec.score}")
+print("baseline == batched output: OK")

@@ -1,0 +1,462 @@
+"""The unified mapper API: one ``Aligner`` facade over pluggable engines.
+
+The paper's contribution is a *reorganisation* of bwa-mem's kernels
+behind an unchanged front-end; this module is that front-end.  Callers
+construct one object and stop caring which driver runs underneath::
+
+    from repro.api import Aligner, AlignOptions
+
+    al = Aligner.from_fasta("ref.fa")            # or .from_bundle/.from_index
+    result = al.align(batch)                     # BatchResult
+    pairs = al.align_pairs(batch1, batch2)
+    al.stream_sam(open_batches("r_1.fq", "r_2.fq"), "out.sam")
+
+* Options: one flattened frozen ``AlignOptions`` (see ``repro.options``)
+  absorbing the five per-stage dataclasses and bwa's flag spellings.
+* Engines: ``AlignOptions.engine`` selects a driver pair through a small
+  registry (``register_engine``), so new backends — the Pallas BSW
+  kernel, TPU occ layouts — plug in without touching any caller.  An
+  engine is two callables with the driver signatures of
+  ``repro.core.pipeline``:
+
+      se(idx, reads, PipelineOptions)                  -> (results, stats)
+      pe(idx, r1, r2, PipelineOptions, PEOptions, names) -> (lines, stats)
+
+* Results: a structured ``BatchResult`` (SAM body + per-stage stats +
+  names + lens + parsed ``AlignmentRecord`` views) replacing the ad-hoc
+  ``(results, stats)`` / ``(lines, stats)`` tuples of the old
+  free-function drivers (now ``DeprecationWarning`` shims).
+
+``Aligner.align`` honors per-read true lengths: a length-padded
+``ReadBatch`` is regrouped by true length and each group is aligned at
+its own width, so pad bases never reach the kernels (the old drivers
+assumed one L per batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Callable, Iterable
+
+import numpy as np
+
+from .core.contig import sam_header as _contig_header
+from .core.pipeline import (run_pe_baseline, run_pe_batched,
+                            run_se_baseline, run_se_batched)
+from .core.sam import format_sam
+from .options import AlignOptions, parse_read_group
+
+VERSION = "0.2.0"                 # keep in sync with pyproject.toml
+
+__all__ = ["Aligner", "AlignOptions", "AlignmentRecord", "BatchResult",
+           "Engine", "engines", "get_engine", "register_engine", "VERSION"]
+
+
+# ---------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """A pluggable driver pair (see module docstring for signatures)."""
+    name: str
+    se: Callable
+    pe: Callable | None = None
+
+
+_ENGINES: dict[str, Engine] = {}
+
+
+def register_engine(name: str, se: Callable, pe: Callable | None = None,
+                    *, replace: bool = False) -> Engine:
+    """Register a driver pair under ``name`` (usable as
+    ``AlignOptions(engine=name)``).  Registering an existing name raises
+    unless ``replace=True`` — backends that shadow a stock engine (e.g. a
+    TPU BSW build replacing "batched") must opt in explicitly."""
+    if name in _ENGINES and not replace:
+        raise ValueError(f"engine {name!r} already registered "
+                         f"(pass replace=True to shadow it)")
+    eng = Engine(name, se, pe)
+    _ENGINES[name] = eng
+    return eng
+
+
+def get_engine(name: str) -> Engine:
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise ValueError(f"unknown engine {name!r} "
+                         f"(registered: {', '.join(sorted(_ENGINES))})")
+
+
+def engines() -> list[str]:
+    """Names of all registered engines."""
+    return sorted(_ENGINES)
+
+
+register_engine("baseline", run_se_baseline, run_pe_baseline)
+register_engine("batched", run_se_batched, run_pe_batched)
+
+
+# ---------------------------------------------------------------------
+# Structured results
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AlignmentRecord:
+    """One SAM record, parsed into typed fields (POS is 0-based here;
+    the SAM text keeps its 1-based convention).  Unmapped placeholder
+    records (SAM POS 0) therefore carry the sentinel ``pos == -1`` —
+    check ``is_unmapped`` before using ``pos``/``pnext``."""
+    qname: str
+    flag: int
+    rname: str
+    pos: int
+    mapq: int
+    cigar: str
+    rnext: str
+    pnext: int
+    tlen: int
+    tags: dict
+
+    @property
+    def is_unmapped(self) -> bool:
+        return bool(self.flag & 0x4)
+
+    @property
+    def is_rev(self) -> bool:
+        return bool(self.flag & 0x10)
+
+    @property
+    def is_secondary(self) -> bool:
+        return bool(self.flag & 0x100)
+
+    @property
+    def is_paired(self) -> bool:
+        return bool(self.flag & 0x1)
+
+    @property
+    def is_proper(self) -> bool:
+        return bool(self.flag & 0x2)
+
+    @property
+    def score(self) -> int | None:
+        v = self.tags.get("AS")
+        return None if v is None else int(v)
+
+    @property
+    def nm(self) -> int | None:
+        v = self.tags.get("NM")
+        return None if v is None else int(v)
+
+    @property
+    def read_group(self) -> str | None:
+        return self.tags.get("RG")
+
+    @classmethod
+    def from_sam(cls, line: str) -> "AlignmentRecord":
+        f = line.rstrip("\n").split("\t")
+        tags = {}
+        for t in f[11:]:
+            tag, _typ, val = t.split(":", 2)
+            tags[tag] = val
+        return cls(qname=f[0], flag=int(f[1]), rname=f[2], pos=int(f[3]) - 1,
+                   mapq=int(f[4]), cigar=f[5], rnext=f[6],
+                   pnext=int(f[7]) - 1, tlen=int(f[8]), tags=tags)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Everything one ``align``/``align_pairs`` call produced.
+
+    ``alignments`` holds the raw per-read ``Alignment`` lists for
+    single-end batches (``None`` for paired batches, whose pair decisions
+    — flags, MAPQ blend, mate fields — exist only in the emitted
+    records); ``sam()`` / ``records()`` are uniform across both.
+    """
+    names: list
+    lens: np.ndarray                  # (B,) SE; (2, B) PE
+    stats: dict
+    paired: bool
+    alignments: list | None = None
+    _sam_body: list = dataclasses.field(default_factory=list, repr=False)
+    _records: list | None = dataclasses.field(default=None, repr=False)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def sam(self) -> list[str]:
+        """SAM body lines (headerless; see ``Aligner.sam_header``)."""
+        return list(self._sam_body)
+
+    def records(self) -> list[AlignmentRecord]:
+        """Parsed views of the SAM body (parsed once, then cached —
+        treat the returned list as read-only)."""
+        if self._records is None:
+            self._records = [AlignmentRecord.from_sam(ln)
+                             for ln in self._sam_body]
+        return self._records
+
+    @property
+    def n_records(self) -> int:
+        return len(self._sam_body)
+
+    @property
+    def n_mapped(self) -> int:
+        return sum(1 for r in self.records()
+                   if not r.is_unmapped and not r.is_secondary)
+
+
+# ---------------------------------------------------------------------
+# Batch coercion helpers
+# ---------------------------------------------------------------------
+
+def _coerce_se(batch, names, lens):
+    """Accept a ReadBatch, a (B, L) uint8 array, or a list of read
+    strings; return (reads, names, lens) with lens always materialised."""
+    if hasattr(batch, "reads") and hasattr(batch, "names"):
+        reads = batch.reads
+        names = list(batch.names) if names is None else list(names)
+        lens = batch.lens if lens is None else lens
+    elif isinstance(batch, (list, tuple)) and batch and \
+            isinstance(batch[0], str):
+        from .io.stream import pack_reads
+        reads, packed_lens = pack_reads(list(batch))
+        lens = packed_lens if lens is None else lens
+    else:
+        reads = np.asarray(batch)
+    if reads.ndim != 2:
+        raise ValueError(f"expected a (B, L) read batch, got shape "
+                         f"{reads.shape}")
+    B = len(reads)
+    if names is None:
+        names = [f"read{r}" for r in range(B)]
+    lens = (np.full(B, reads.shape[1], np.int64) if lens is None
+            else np.asarray(lens, dtype=np.int64))
+    if len(names) != B or len(lens) != B:
+        raise ValueError("names/lens length mismatch with the batch")
+    if B and int(lens.max()) > reads.shape[1]:
+        raise ValueError(f"lens (max {int(lens.max())}) exceed the batch "
+                         f"width {reads.shape[1]}")
+    return reads, list(names), lens
+
+
+def _coerce_pe(batch1, batch2, names):
+    if hasattr(batch1, "reads1") and hasattr(batch1, "reads2"):
+        if batch2 is not None:
+            raise ValueError("pass a PairBatch alone, or two read arrays")
+        r1, r2 = batch1.reads1, batch1.reads2
+        names = list(batch1.names) if names is None else list(names)
+        lens = np.stack([batch1.lens1, batch1.lens2])
+    else:
+        if batch2 is None:
+            raise ValueError("align_pairs needs a PairBatch or both ends")
+        r1, r2 = np.asarray(batch1), np.asarray(batch2)
+        B = len(r1)
+        lens = np.stack([np.full(B, r1.shape[1], np.int64),
+                         np.full(B, r2.shape[1], np.int64)])
+    if r1.shape[1] != r2.shape[1]:
+        raise ValueError("paired ends must share one padded width "
+                         "(io.stream.stream_pair_batches guarantees this)")
+    if names is None:
+        names = [f"pair{p}" for p in range(len(r1))]
+    if len(names) != len(r1) or len(r1) != len(r2):
+        raise ValueError("names/ends length mismatch")
+    return r1, r2, list(names), lens
+
+
+def _merge_stats(total: dict, part: dict) -> None:
+    """Numeric stats sum; non-summable ones (e.g. per-batch insert-size
+    estimates) are collected into a list, one entry per merged part."""
+    for k, v in part.items():
+        if isinstance(v, (int, float, np.integer, np.floating)):
+            total[k] = total.get(k, 0) + v
+        else:
+            total.setdefault(k, []).append(v)
+
+
+# ---------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------
+
+class Aligner:
+    """One mapper object: an FM-index + one ``AlignOptions``.
+
+    Construct via ``from_fasta`` (build in memory), ``from_bundle``
+    (load a persisted ``repro.cli index`` bundle) or ``from_index``
+    (wrap an existing FMIndex/ContigIndex).
+    """
+
+    def __init__(self, index, options: AlignOptions | None = None):
+        self.index = index
+        self.options = options or AlignOptions()
+        get_engine(self.options.engine)        # fail fast on a bad name
+        self._rg: tuple[str, str] | None = None
+        if self.options.read_group:
+            self._rg = parse_read_group(self.options.read_group)
+
+    # -- constructors --
+
+    @classmethod
+    def from_index(cls, index, options: AlignOptions | None = None
+                   ) -> "Aligner":
+        return cls(index, options)
+
+    @classmethod
+    def from_fasta(cls, path, options: AlignOptions | None = None,
+                   **load_kw) -> "Aligner":
+        """Build the FM-index in memory from a (gzipped) FASTA."""
+        from .core.contig import build_contig_index
+        from .io.fasta import load_reference
+        return cls(build_contig_index(load_reference(path, **load_kw)),
+                   options)
+
+    @classmethod
+    def from_bundle(cls, prefix, options: AlignOptions | None = None
+                    ) -> "Aligner":
+        """Load a persisted index bundle (``repro.cli index`` output)."""
+        from .io.store import load_index
+        return cls(load_index(prefix), options)
+
+    # -- internals --
+
+    def _engine(self, override: str | None) -> Engine:
+        return get_engine(override or self.options.engine)
+
+    def _tag(self, lines: list[str]) -> list[str]:
+        if self._rg is None:
+            return lines
+        rg = f"\tRG:Z:{self._rg[1]}"
+        return [ln + rg for ln in lines]
+
+    def _read_lines(self, name, read, alns) -> list[str]:
+        if not alns:
+            return [format_sam(name, read, None, self.index)]
+        return [format_sam(name, read, a, self.index) for a in alns]
+
+    # -- alignment --
+
+    def align(self, batch, *, names=None, lens=None,
+              engine: str | None = None) -> BatchResult:
+        """Single-end alignment of one batch -> ``BatchResult``.
+
+        ``batch`` is a ``repro.io.stream.ReadBatch``, a (B, L) uint8
+        array, or a list of read strings.  Per-read true lengths are
+        honored: reads are regrouped by length and each group runs at its
+        own width, so the pad bases of a length-padded batch are masked
+        rather than fed to the kernels.
+        """
+        reads, names, lens = _coerce_se(batch, names, lens)
+        eng = self._engine(engine)
+        popt = self.options.pipeline_options()
+        B = len(reads)
+        stats: dict = {}
+        groups = np.unique(lens)
+        if len(groups) == 1 and int(groups[0]) == reads.shape[1]:
+            # uniform full-width batch (the common streaming case): no copy
+            results, st = eng.se(self.index, reads, popt)
+            _merge_stats(stats, st)
+            body = [self._read_lines(names[r], reads[r], results[r])
+                    for r in range(B)]
+        else:
+            results = [None] * B
+            body = [None] * B
+            for L in groups:
+                rows = np.nonzero(lens == L)[0]
+                sub = reads[rows][:, :int(L)]
+                res, st = eng.se(self.index, sub, popt)
+                _merge_stats(stats, st)
+                for row, alns in zip(rows, res):
+                    results[row] = alns
+                    body[row] = self._read_lines(names[row],
+                                                 reads[row][:int(L)], alns)
+        stats["n_length_groups"] = len(groups)
+        flat = self._tag([ln for rl in body for ln in rl])
+        return BatchResult(names=names, lens=lens, stats=stats,
+                           paired=False, alignments=results, _sam_body=flat)
+
+    def align_pairs(self, batch1, batch2=None, *, names=None,
+                    engine: str | None = None) -> BatchResult:
+        """Paired-end alignment -> ``BatchResult`` whose records carry
+        mate fields, proper-pair flags and the pair-aware MAPQ blend.
+
+        ``batch1`` is a ``PairBatch`` (alone) or end-1 reads with
+        ``batch2`` as end-2.  Unlike :meth:`align`, per-read lens are
+        recorded on the result but NOT masked: pair batches run at one
+        padded width, because regrouping pairs by length would change the
+        per-batch insert-size estimates (see ROADMAP open item).
+        """
+        r1, r2, names, lens = _coerce_pe(batch1, batch2, names)
+        eng = self._engine(engine)
+        if eng.pe is None:
+            raise ValueError(f"engine {eng.name!r} has no paired-end driver")
+        lines, stats = eng.pe(self.index, r1, r2,
+                              self.options.pipeline_options(),
+                              self.options.pe_options(), names)
+        return BatchResult(names=names, lens=lens, stats=dict(stats),
+                           paired=True, alignments=None,
+                           _sam_body=self._tag(lines))
+
+    # -- SAM emission --
+
+    def sam_header(self, cl: str | None = None) -> list[str]:
+        """``@SQ`` lines (+ ``@RG`` when configured, + ``@PG`` when a
+        command line is given)."""
+        extra = []
+        if self._rg is not None:
+            extra.append(self._rg[0])
+        if cl is not None:
+            extra.append(f"@PG\tID:repro\tPN:repro\tVN:{VERSION}\tCL:{cl}")
+        return _contig_header(self.index, extra=extra)
+
+    def stream_sam(self, batches: Iterable, out=None, *, header: bool = True,
+                   cl: str | None = None, engine: str | None = None) -> dict:
+        """Drive an iterable of ``ReadBatch``/``PairBatch`` (e.g. from
+        ``repro.io.stream.open_batches``) through the engine and write
+        SAM to ``out`` (a path, a file object, or None for stdout).
+
+        Returns a summary: n_reads/n_records/n_batches plus the merged
+        per-stage stats (numeric counters summed across batches,
+        non-summable entries like insert-size estimates collected into
+        per-batch lists).
+        """
+        close = False
+        if out is None:
+            fh = sys.stdout
+        elif hasattr(out, "write"):
+            fh = out
+        else:
+            fh = open(out, "w")
+            close = True
+        n_reads = n_records = n_batches = max_groups = 0
+        stats: dict = {}
+        try:
+            if header:
+                for ln in self.sam_header(cl=cl):
+                    print(ln, file=fh)
+            for b in batches:
+                if hasattr(b, "reads1"):
+                    res = self.align_pairs(b, engine=engine)
+                    n_reads += 2 * len(b)
+                else:
+                    res = self.align(b, engine=engine)
+                    n_reads += len(b)
+                for ln in res.sam():
+                    print(ln, file=fh)
+                n_records += res.n_records
+                n_batches += 1
+                part = dict(res.stats)
+                # summing this across batches would be meaningless; the
+                # summary reports the worst (max) per-batch group count
+                ng = part.pop("n_length_groups", 0)
+                max_groups = max(max_groups, ng)
+                _merge_stats(stats, part)
+            if max_groups:
+                stats["n_length_groups"] = max_groups
+            fh.flush()
+        finally:
+            if close:
+                fh.close()
+        return dict(n_reads=n_reads, n_records=n_records,
+                    n_batches=n_batches, stats=stats)

@@ -1,25 +1,27 @@
-"""bwa-mem-shaped command-line front-end.
+"""bwa-mem-shaped command-line front-end over the ``Aligner`` facade.
 
 Two subcommands, mirroring the tool the paper accelerates::
 
     python -m repro.cli index ref.fa[.gz] [-p PREFIX]
     python -m repro.cli mem  ref.fa reads_1.fq[.gz] [reads_2.fq[.gz]]
                              [-o out.sam] [--interleaved] [--batch-size B]
-                             [--shard i/n] [--baseline-occ? no]
+                             [--shard i/n] [--engine baseline|batched]
+                             [-k -w -r -c -A -B -O -E -L -d -T -U]
+                             [-R '@RG\\tID:...']
 
 ``index`` ingests a (gzipped) multi-contig FASTA through
 ``io.fasta.load_reference`` (IUPAC ambiguity -> seeded random base, as
 bwa does), builds the concatenated-contig FM-index and persists it as
 the versioned bundle of ``io.store`` next to the FASTA.
 
-``mem`` loads that bundle (building in-memory with a warning when it is
-missing), streams reads in fixed-size batches through ``io.stream`` and
-drives the paper's stage-major batched pipeline —
-``align_reads_optimized`` single-end, ``align_pairs_optimized`` paired
-(split or interleaved FASTQ) — writing SAM with proper ``@SQ``/``@PG``
-headers to a file or stdout.  ``--shard i/n`` keeps only every n-th
-read (pair), the ``repro.dist`` worker partition (defaults to this
-process's rank when running under a multi-process jax runtime).
+``mem`` builds ONE ``repro.api.Aligner`` from that bundle (in-memory
+with a warning when it is missing), maps bwa's alignment flags onto a
+single ``AlignOptions`` (see ``repro.options.BWA_FLAGS``), streams reads
+in fixed-size batches through ``io.stream.open_batches`` and writes SAM
+via ``Aligner.stream_sam`` — ``@SQ``/``@RG``/``@PG`` headers, per-record
+``RG:Z:`` tags when ``-R`` is given, file or stdout.  ``--shard i/n``
+keeps only every n-th read (pair), the ``repro.dist`` worker partition
+(defaults to this process's rank under a multi-process jax runtime).
 """
 
 from __future__ import annotations
@@ -28,16 +30,9 @@ import argparse
 import sys
 import time
 
-VERSION = "0.1.0"
-
 
 def _log(msg: str) -> None:
     print(f"[repro.cli] {msg}", file=sys.stderr, flush=True)
-
-
-def _pg_line(argv: list[str]) -> str:
-    cl = " ".join(["repro.cli"] + list(argv))
-    return f"@PG\tID:repro\tPN:repro\tVN:{VERSION}\tCL:{cl}"
 
 
 def _load_or_build(ref: str):
@@ -77,60 +72,53 @@ def cmd_index(args, argv) -> int:
     return 0
 
 
+def _options_from_args(args):
+    """Fold the bwa-flag namespace entries into one AlignOptions (the
+    flag list is BWA_FLAGS itself, so new flags need only the table and
+    an add_argument line)."""
+    from .options import AlignOptions, BWA_FLAGS
+    flags = {f: getattr(args, "read_group" if f == "-R" else f.lstrip("-"))
+             for f in BWA_FLAGS}
+    return AlignOptions.from_flags(flags, engine=args.engine)
+
+
 def cmd_mem(args, argv) -> int:
-    import numpy as np  # noqa: F401  (pipeline dep; fail early if absent)
-
-    from .core.contig import sam_header
-    from .core.pipeline import (PipelineOptions, align_pairs_optimized,
-                                align_reads_optimized, to_sam)
+    from .api import Aligner
     from .dist.api import read_shard
-    from .io.stream import stream_batches, stream_pair_batches
+    from .io.stream import open_batches
 
-    paired = args.reads2 is not None or args.interleaved
+    try:
+        options = _options_from_args(args)
+    except ValueError as e:
+        _log(f"error: {e}")
+        return 2
     shard = read_shard(args.shard)
     if shard != (0, 1):
         _log(f"streaming shard {shard[0]}/{shard[1]}")
-    idx = _load_or_build(args.ref)
-    opt = PipelineOptions()
-    out = sys.stdout if args.output in (None, "-") else open(args.output, "w")
-    t0 = time.time()
-    n_reads = n_lines = 0
     try:
-        for ln in sam_header(idx, extra=[_pg_line(argv)]):
-            print(ln, file=out)
-        if paired:
-            batches = stream_pair_batches(
-                args.reads1, args.reads2, args.batch_size,
-                interleaved=args.interleaved, shard=shard)
-            for b in batches:
-                lines, _ = align_pairs_optimized(idx, b.reads1, b.reads2,
-                                                 opt, names=b.names)
-                for ln in lines:
-                    print(ln, file=out)
-                n_reads += 2 * len(b)
-                n_lines += len(lines)
-        else:
-            for b in stream_batches(args.reads1, args.batch_size,
-                                    shard=shard):
-                results, _ = align_reads_optimized(idx, b.reads, opt)
-                for ln in to_sam(b.reads, results, names=b.names, idx=idx):
-                    print(ln, file=out)
-                    n_lines += 1
-                n_reads += len(b)
-        out.flush()
-    finally:
-        if out is not sys.stdout:
-            out.close()
+        aligner = Aligner.from_index(_load_or_build(args.ref), options)
+    except ValueError as e:
+        _log(f"error: {e}")
+        return 2
+    batches = open_batches(args.reads1, args.reads2,
+                           batch_size=args.batch_size,
+                           interleaved=args.interleaved, shard=shard)
+    out = None if args.output in (None, "-") else args.output
+    t0 = time.time()
+    summary = aligner.stream_sam(batches, out,
+                                 cl=" ".join(["repro.cli"] + list(argv)))
     dt = max(time.time() - t0, 1e-9)
-    _log(f"aligned {n_reads} reads ({n_lines} SAM records) in {dt:.1f}s "
-         f"({n_reads / dt:.1f} reads/s)")
+    _log(f"aligned {summary['n_reads']} reads "
+         f"({summary['n_records']} SAM records, "
+         f"{summary['n_batches']} batches, engine={aligner.options.engine}) "
+         f"in {dt:.1f}s ({summary['n_reads'] / dt:.1f} reads/s)")
     return 0
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.cli",
-        description="bwa-mem-shaped front-end over the batched pipeline")
+        description="bwa-mem-shaped front-end over the Aligner facade")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     ix = sub.add_parser("index", help="build + persist the FM-index bundle")
@@ -159,6 +147,39 @@ def build_parser() -> argparse.ArgumentParser:
     mm.add_argument("--shard", default=None, metavar="i/n",
                     help="stream only shard i of n (default: this "
                          "process's repro.dist rank, else everything)")
+    mm.add_argument("--engine", default="batched",
+                    help="registered alignment engine (default: batched; "
+                         "see repro.api.engines())")
+    # bwa mem alignment flags (see repro.options.BWA_FLAGS)
+    mm.add_argument("-k", type=int, default=None, metavar="INT",
+                    help="minimum seed length [19]")
+    mm.add_argument("-w", type=int, default=None, metavar="INT",
+                    help="band width [100]")
+    mm.add_argument("-r", type=float, default=None, metavar="FLOAT",
+                    help="reseed trigger: split SMEMs longer than "
+                         "FLOAT*k [1.5]")
+    mm.add_argument("-c", type=int, default=None, metavar="INT",
+                    help="skip seeds with more than INT occurrences [500]")
+    mm.add_argument("-A", type=int, default=None, metavar="INT",
+                    help="match score [1]")
+    mm.add_argument("-B", type=int, default=None, metavar="INT",
+                    help="mismatch penalty [4]")
+    mm.add_argument("-O", default=None, metavar="INT[,INT]",
+                    help="gap open penalty (deletion,insertion) [6,6]")
+    mm.add_argument("-E", default=None, metavar="INT[,INT]",
+                    help="gap extension penalty [1,1]")
+    mm.add_argument("-L", default=None, metavar="INT[,INT]",
+                    help="5'- and 3'-end clipping penalty [5,5]")
+    mm.add_argument("-d", type=int, default=None, metavar="INT",
+                    help="Z-drop [100]")
+    mm.add_argument("-T", type=int, default=None, metavar="INT",
+                    help="minimum output alignment score [30]")
+    mm.add_argument("-U", type=int, default=None, metavar="INT",
+                    help="unpaired read-pair penalty [17]")
+    mm.add_argument("-R", "--read-group", default=None, metavar="STR",
+                    help=r"read group header line, e.g. '@RG\tID:sample' "
+                         "(emits the @RG header and an RG:Z: tag on every "
+                         "record)")
     mm.set_defaults(fn=cmd_mem)
     return ap
 

@@ -3,6 +3,7 @@ from .contig import (ContigIndex, build_contig_index, contig_id,  # noqa: F401
                      same_contig, sam_header, translate)
 from .smem import MemOptions, collect_smems, collect_smems_batch  # noqa: F401
 from .bsw import BSWParams, bsw_extend, bsw_extend_batch  # noqa: F401
-from .pipeline import (PipelineOptions, align_reads_baseline,  # noqa: F401
-                       align_reads_optimized, align_pairs_baseline,
-                       align_pairs_optimized, to_sam)
+from .pipeline import (PipelineOptions, run_se_baseline,  # noqa: F401
+                       run_se_batched, run_pe_baseline, run_pe_batched,
+                       align_reads_baseline, align_reads_optimized,
+                       align_pairs_baseline, align_pairs_optimized, to_sam)

@@ -1,12 +1,16 @@
 """End-to-end BWA-MEM pipeline: SMEM -> SAL -> CHAIN -> BSW -> SAM-FORM.
 
-Two drivers with IDENTICAL output (verified in tests/test_pipeline.py):
+Two drivers with IDENTICAL output (verified in tests/test_pipeline.py),
+registered as the ``"baseline"`` and ``"batched"`` engines of the
+``repro.api.Aligner`` facade (the public entry point — the
+``align_reads_*`` / ``align_pairs_*`` names are deprecated shims kept
+for callers of the old free-function API):
 
-* ``align_reads_baseline`` — original BWA-MEM organisation (Fig 2 left):
+* ``run_se_baseline`` — original BWA-MEM organisation (Fig 2 left):
   each read runs through every stage before the next read starts; scalar
   oracle kernels; compressed-SA lookups; eta=128 occ layout.
 
-* ``align_reads_optimized`` — the paper's reorganisation (Fig 2 right):
+* ``run_se_batched`` — the paper's reorganisation (Fig 2 right):
   every stage runs over the WHOLE batch before the next stage; lockstep-
   batched SMEM (eta=32 vectorized occ), single-gather SAL, and inter-task
   vectorized BSW with length-sorting (§5.3.1).  Extension decisions that
@@ -23,6 +27,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -316,7 +321,8 @@ class BatchedBSWExecutor:
 def mark_and_finalize(alns: list[Alignment], query: np.ndarray,
                       S: np.ndarray, l_pac: int, p: BSWParams,
                       min_seed_len: int,
-                      frep: float = 0.0) -> list[Alignment]:
+                      frep: float = 0.0,
+                      min_score: int = 30) -> list[Alignment]:
     if not alns:
         return []
     alns = sorted(alns, key=lambda a: (-a.score, a.qb, a.rb))
@@ -341,7 +347,7 @@ def mark_and_finalize(alns: list[Alignment], query: np.ndarray,
     # bwa -a semantics: report every region with truesc >= T (default 30)
     out = []
     for a in alns:
-        if a.truesc < 30:
+        if a.truesc < min_score:
             continue
         finalize_alignment(a, query, S, l_pac, p)
         a.mapq = approx_mapq(a, p, min_seed_len) if a.secondary < 0 else 0
@@ -417,10 +423,11 @@ class PipelineOptions:
     bsw: BSWParams = BSWParams()
     bsw_block: int = 256
     bsw_sort: bool = True
+    min_score: int = 30             # emission threshold (bwa -T)
 
 
-def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
-                         opt: PipelineOptions = PipelineOptions()):
+def run_se_baseline(idx: FMIndex, reads: np.ndarray,
+                    opt: PipelineOptions = PipelineOptions()):
     """Original organisation: per-read, scalar kernels, compressed SA,
     eta=128 occ. Returns (list per read of Alignment, stats)."""
     S = idx.seq
@@ -463,12 +470,13 @@ def align_reads_baseline(idx: FMIndex, reads: np.ndarray,
             alns.extend(chain2aln(c, q, idx, opt.bsw, counting_fn))
         stats["bsw_tasks"] += counting[0]
         results.append(mark_and_finalize(alns, q, S, l_pac, opt.bsw,
-                                         opt.mem.min_seed_len, frep=frep))
+                                         opt.mem.min_seed_len, frep=frep,
+                                         min_score=opt.min_score))
     return results, stats
 
 
-def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
-                          opt: PipelineOptions = PipelineOptions()):
+def run_se_batched(idx: FMIndex, reads: np.ndarray,
+                   opt: PipelineOptions = PipelineOptions()):
     """Paper's organisation (Fig 2 right): stage-major over the batch."""
     S = idx.seq
     l_pac = idx.n_ref
@@ -503,23 +511,24 @@ def align_reads_optimized(idx: FMIndex, reads: np.ndarray,
                                   execu.executor((r, ci))))
         frep = smem_mod.frac_rep(mems[r], L, opt.mem.max_occ)
         results.append(mark_and_finalize(alns, reads[r], S, l_pac, opt.bsw,
-                                         opt.mem.min_seed_len, frep=frep))
+                                         opt.mem.min_seed_len, frep=frep,
+                                         min_score=opt.min_score))
     stats = dict(sa_lookups=n_lookups, bsw_tasks=execu.stats["tasks"],
                  cells_useful=execu.stats["cells_useful"],
                  cells_total=execu.stats["cells_total"])
     return results, stats
 
 
-def align_pairs_baseline(idx: FMIndex, reads1: np.ndarray,
-                         reads2: np.ndarray,
-                         opt: PipelineOptions = PipelineOptions(),
-                         pe_opt=None, names=None):
+def run_pe_baseline(idx: FMIndex, reads1: np.ndarray,
+                    reads2: np.ndarray,
+                    opt: PipelineOptions = PipelineOptions(),
+                    pe_opt=None, names=None):
     """Paired-end baseline: per-read scalar SE alignment of both ends,
     then insert-size estimation, SCALAR mate rescue and pair-aware SAM
     emission.  Returns (sam_lines, stats)."""
     from ..pe import pair_pipeline   # deferred: repro.pe imports this module
-    res1, s1 = align_reads_baseline(idx, reads1, opt)
-    res2, s2 = align_reads_baseline(idx, reads2, opt)
+    res1, s1 = run_se_baseline(idx, reads1, opt)
+    res2, s2 = run_se_baseline(idx, reads2, opt)
     lines, pstats = pair_pipeline(idx, reads1, reads2, res1, res2, opt,
                                   pe_opt, batched=False, names=names)
     stats = {k: s1[k] + s2[k] for k in s1}
@@ -527,25 +536,66 @@ def align_pairs_baseline(idx: FMIndex, reads1: np.ndarray,
     return lines, stats
 
 
-def align_pairs_optimized(idx: FMIndex, reads1: np.ndarray,
-                          reads2: np.ndarray,
-                          opt: PipelineOptions = PipelineOptions(),
-                          pe_opt=None, names=None):
-    """Paired-end optimized driver (paper's organisation extended to PE):
+def run_pe_batched(idx: FMIndex, reads1: np.ndarray,
+                   reads2: np.ndarray,
+                   opt: PipelineOptions = PipelineOptions(),
+                   pe_opt=None, names=None):
+    """Paired-end batched driver (paper's organisation extended to PE):
     stage-major batched SE alignment over BOTH ends at once, then the
     whole batch's mate-rescue extensions pooled through the length-sorted
-    BSW executor.  Output is byte-identical to ``align_pairs_baseline``
+    BSW executor.  Output is byte-identical to ``run_pe_baseline``
     (tested)."""
     from ..pe import pair_pipeline   # deferred: repro.pe imports this module
     n = len(reads1)
     both = np.concatenate([reads1, reads2], axis=0)
-    res, s = align_reads_optimized(idx, both, opt)
+    res, s = run_se_batched(idx, both, opt)
     res1, res2 = res[:n], res[n:]
     lines, pstats = pair_pipeline(idx, reads1, reads2, res1, res2, opt,
                                   pe_opt, batched=True, names=names)
     stats = dict(s)
     stats.update(pstats)
     return lines, stats
+
+
+# ---------------------------------------------------------------------
+# Deprecated free-function API (pre-Aligner).  These shims stay byte-
+# identical to the engines behind ``repro.api.Aligner`` (tested in
+# tests/test_api.py); internal repro code must not call them — tier-1
+# runs with DeprecationWarning-as-error filtered to repro.* modules.
+# ---------------------------------------------------------------------
+
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"{old} is deprecated; construct a repro.api.Aligner "
+        f"(or call {new}) instead", DeprecationWarning, stacklevel=3)
+
+
+def align_reads_baseline(idx, reads, opt: PipelineOptions = PipelineOptions()):
+    """Deprecated alias of :func:`run_se_baseline`."""
+    _deprecated("align_reads_baseline", "run_se_baseline")
+    return run_se_baseline(idx, reads, opt)
+
+
+def align_reads_optimized(idx, reads, opt: PipelineOptions = PipelineOptions()):
+    """Deprecated alias of :func:`run_se_batched`."""
+    _deprecated("align_reads_optimized", "run_se_batched")
+    return run_se_batched(idx, reads, opt)
+
+
+def align_pairs_baseline(idx, reads1, reads2,
+                         opt: PipelineOptions = PipelineOptions(),
+                         pe_opt=None, names=None):
+    """Deprecated alias of :func:`run_pe_baseline`."""
+    _deprecated("align_pairs_baseline", "run_pe_baseline")
+    return run_pe_baseline(idx, reads1, reads2, opt, pe_opt, names=names)
+
+
+def align_pairs_optimized(idx, reads1, reads2,
+                          opt: PipelineOptions = PipelineOptions(),
+                          pe_opt=None, names=None):
+    """Deprecated alias of :func:`run_pe_batched`."""
+    _deprecated("align_pairs_optimized", "run_pe_batched")
+    return run_pe_batched(idx, reads1, reads2, opt, pe_opt, names=names)
 
 
 def to_sam(reads: np.ndarray, results, names=None, idx=None) -> list[str]:

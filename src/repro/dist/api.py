@@ -97,6 +97,26 @@ def read_shard(spec: str | None = None) -> tuple[int, int]:
     return (i, n) if n > 1 else (0, 1)
 
 
+def align_shard(aligner, reads1, reads2=None, out=None, *,
+                spec: str | None = None, batch_size: int = 512,
+                interleaved: bool = False, header: bool = True,
+                cl: str | None = None) -> dict:
+    """Stream THIS worker's shard of a FASTQ through an ``Aligner``.
+
+    The worker-level building block for multi-worker ``mem``: n processes
+    each call ``align_shard(aligner, fq1, fq2, out_i)`` with their own
+    output path (shard resolution as in :func:`read_shard` — explicit
+    ``spec`` or jax process rank) and together cover every read exactly
+    once; merging the per-shard SAMs is the remaining ROADMAP item.
+    Returns ``Aligner.stream_sam``'s summary dict.
+    """
+    from ..io.stream import open_batches   # deferred: keep dist jax-light
+    shard = read_shard(spec)
+    batches = open_batches(reads1, reads2, batch_size=batch_size,
+                           interleaved=interleaved, shard=shard)
+    return aligner.stream_sam(batches, out, header=header, cl=cl)
+
+
 def constrain(x, *axes):
     """Sharding constraint by logical axis name per array dim.
 

@@ -1,9 +1,10 @@
 """Chunked streaming batch reader for the stage-major pipeline.
 
-The optimized drivers (``align_reads_optimized`` /
-``align_pairs_optimized``) want rectangular (B, L) uint8 batches — the
-whole point of the paper's reorganisation is running each stage over a
-big batch.  This module turns a FASTQ stream into exactly that shape:
+The batched engines behind ``repro.api.Aligner`` want rectangular
+(B, L) uint8 batches — the whole point of the paper's reorganisation is
+running each stage over a big batch.  This module turns a FASTQ stream
+into exactly that shape (``open_batches`` is the one-call entry point;
+feed its iterator straight to ``Aligner.stream_sam``):
 
 * fixed-size batches (the last one ragged), sequences length-padded with
   the ambiguity code 4, true lengths carried alongside (trailing pad
@@ -77,10 +78,11 @@ def _sharded(it, shard):
             yield item
 
 
-def _pack(seqs: list[str], width: int | None = None
-          ) -> tuple[np.ndarray, np.ndarray]:
+def pack_reads(seqs: list[str], width: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray]:
     """Encode + right-pad a list of read strings to one (B, width) array
-    (width defaults to the batch max length)."""
+    (width defaults to the batch max length).  Returns (reads, lens) —
+    the true lengths that ``Aligner.align`` uses to mask the padding."""
     lens = np.array([len(s) for s in seqs], dtype=np.int64)
     L = int(lens.max(initial=1)) if width is None else width
     out = np.full((len(seqs), L), PAD_CODE, dtype=np.uint8)
@@ -101,11 +103,11 @@ def stream_batches(path, batch_size: int = 512, *,
         names.append(rec.name)
         seqs.append(rec.seq)
         if len(names) == batch_size:
-            reads, lens = _pack(seqs)
+            reads, lens = pack_reads(seqs)
             yield ReadBatch(names, reads, lens)
             names, seqs = [], []
     if names:
-        reads, lens = _pack(seqs)
+        reads, lens = pack_reads(seqs)
         yield ReadBatch(names, reads, lens)
 
 
@@ -129,8 +131,8 @@ def stream_pair_batches(path1, path2=None, batch_size: int = 512, *,
         # ONE width across both ends: the PE driver stacks R1 and R2 into
         # a single (2B, L) batch, so per-side maxima must agree
         w = max(max(map(len, s1)), max(map(len, s2)))
-        reads1, lens1 = _pack(s1, w)
-        reads2, lens2 = _pack(s2, w)
+        reads1, lens1 = pack_reads(s1, w)
+        reads2, lens2 = pack_reads(s2, w)
         return PairBatch(list(names), reads1, reads2, lens1, lens2)
 
     for r1, r2 in _sharded(pairs, shard):
@@ -142,3 +144,16 @@ def stream_pair_batches(path1, path2=None, batch_size: int = 512, *,
             names, s1, s2 = [], [], []
     if names:
         yield flush()
+
+
+def open_batches(path1, path2=None, *, batch_size: int = 512,
+                 interleaved: bool = False,
+                 shard=None) -> Iterator[ReadBatch | PairBatch]:
+    """Unified entry point: one FASTQ -> ``ReadBatch``es, two FASTQs (or
+    one interleaved) -> ``PairBatch``es.  The returned iterator plugs
+    straight into ``repro.api.Aligner.stream_sam``, which dispatches on
+    the batch type."""
+    if path2 is not None or interleaved:
+        return stream_pair_batches(path1, path2, batch_size,
+                                   interleaved=interleaved, shard=shard)
+    return stream_batches(path1, batch_size, shard=shard)

@@ -1,0 +1,404 @@
+"""The unified Aligner facade (repro.api / repro.options).
+
+Covers the API-redesign contract:
+
+* golden byte-identity: the deprecated ``align_reads_*`` /
+  ``align_pairs_*`` shims and ``Aligner`` produce identical SAM on SE,
+  PE and multi-contig workloads, for both engines;
+* options: every bwa flag alias lands on the right ``AlignOptions``
+  field, and the projections reproduce the per-stage defaults exactly;
+* per-read lens: a length-padded mixed-length batch aligns each read at
+  its true length (pad bases masked);
+* read groups: ``-R`` plumbing emits the @RG header and an RG:Z: tag on
+  every record;
+* engine registry: registration, dispatch, duplicate protection;
+* the shims warn (and tier-1 errors on warnings raised from repro.*).
+"""
+
+import dataclasses
+import io
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (Aligner, AlignmentRecord, BatchResult, engines,
+                       get_engine, register_engine)
+from repro.core import fmindex as fmx
+from repro.core.bsw import BSWParams
+from repro.core.chain import ChainOptions
+from repro.core.contig import build_contig_index, sam_header
+from repro.core.pipeline import (PipelineOptions, run_se_batched, to_sam,
+                                 align_pairs_baseline, align_pairs_optimized,
+                                 align_reads_baseline, align_reads_optimized)
+from repro.core.smem import MemOptions
+from repro.data import (make_reference, simulate_pairs,
+                        simulate_pairs_multi, simulate_reads,
+                        simulate_reference)
+from repro.io.stream import PairBatch, ReadBatch, pack_reads
+from repro.options import AlignOptions, BWA_FLAGS, parse_read_group
+from repro.pe.rescue import PEOptions
+
+
+@pytest.fixture(scope="module")
+def world():
+    ref = make_reference(20000, seed=7)
+    idx = fmx.build_index(ref)
+    reads, truth = simulate_reads(ref, 12, 101, seed=3)
+    return idx, reads, truth
+
+
+@pytest.fixture(scope="module")
+def pe_world():
+    ref = make_reference(30000, seed=5)
+    idx = fmx.build_index(ref)
+    r1, r2, _ = simulate_pairs(ref, 24, 101, insert_mean=300, insert_std=30,
+                               seed=9, burst_frac=0.25)
+    return idx, r1, r2
+
+
+@pytest.fixture(scope="module")
+def contig_world():
+    contigs = simulate_reference(45000, 3, seed=11)
+    idx = build_contig_index(contigs)
+    r1, r2, _ = simulate_pairs_multi(contigs, 16, 101, seed=13,
+                                     insert_mean=300, insert_std=30,
+                                     burst_frac=0.1)
+    return idx, r1, r2
+
+
+def _shim(fn, *args, **kw):
+    """Call a deprecated shim, asserting it actually warns."""
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        return fn(*args, **kw)
+
+
+# ---------------------------------------------------------------------
+# Golden byte-identity: shims vs facade
+# ---------------------------------------------------------------------
+
+def test_se_golden_both_engines(world):
+    idx, reads, _ = world
+    al = Aligner.from_index(idx)
+    for engine, shim in (("batched", align_reads_optimized),
+                         ("baseline", align_reads_baseline)):
+        res, _ = _shim(shim, idx, reads)
+        want = to_sam(reads, res, idx=idx)
+        assert al.align(reads, engine=engine).sam() == want
+
+
+def test_pe_golden_both_engines(pe_world):
+    idx, r1, r2 = pe_world
+    al = Aligner.from_index(idx)
+    for engine, shim in (("batched", align_pairs_optimized),
+                         ("baseline", align_pairs_baseline)):
+        want, _ = _shim(shim, idx, r1, r2)
+        assert al.align_pairs(r1, r2, engine=engine).sam() == want
+
+
+def test_multicontig_golden(contig_world):
+    idx, r1, r2 = contig_world
+    al = Aligner.from_index(idx)
+    want, _ = _shim(align_pairs_optimized, idx, r1, r2)
+    got = al.align_pairs(r1, r2)
+    assert got.sam() == want
+    # the multi-contig machinery is actually exercised
+    assert len({r.rname for r in got.records()} - {"*"}) >= 2
+    # SE over one end too
+    res, _ = _shim(align_reads_optimized, idx, r1)
+    assert al.align(r1).sam() == to_sam(r1, res, idx=idx)
+
+
+def test_batch_result_shape(world):
+    idx, reads, _ = world
+    res = Aligner.from_index(idx).align(reads)
+    assert isinstance(res, BatchResult)
+    assert len(res) == len(reads)
+    assert res.names == [f"read{r}" for r in range(len(reads))]
+    assert res.lens.tolist() == [reads.shape[1]] * len(reads)
+    assert res.n_records == len(res.sam())
+    assert res.stats["bsw_tasks"] > 0
+    assert len(res.alignments) == len(reads)
+    rec = res.records()[0]
+    assert isinstance(rec, AlignmentRecord)
+    assert rec.score is not None and rec.nm is not None
+
+
+def test_read_batch_and_strings_inputs(world):
+    idx, reads, _ = world
+    al = Aligner.from_index(idx)
+    want = al.align(reads).sam()
+    lens = np.full(len(reads), reads.shape[1], np.int64)
+    rb = ReadBatch([f"read{r}" for r in range(len(reads))], reads, lens)
+    assert al.align(rb).sam() == want
+    # list-of-strings round trip
+    strings = ["".join("ACGTN"[b] for b in row) for row in reads]
+    assert al.align(strings).sam() == want
+
+
+def test_pair_batch_input(pe_world):
+    idx, r1, r2 = pe_world
+    al = Aligner.from_index(idx)
+    names = [f"pair{p}" for p in range(len(r1))]
+    L = np.full(len(r1), r1.shape[1], np.int64)
+    pb = PairBatch(names, r1, r2, L, L)
+    assert al.align_pairs(pb).sam() == al.align_pairs(r1, r2).sam()
+    with pytest.raises(ValueError):
+        al.align_pairs(pb, r2)
+    with pytest.raises(ValueError):
+        al.align_pairs(r1)
+
+
+# ---------------------------------------------------------------------
+# Options surface
+# ---------------------------------------------------------------------
+
+FLAG_CASES = [
+    ("-k", 25, {"min_seed_len": 25}),
+    ("-w", 50, {"band_width": 50}),
+    ("-r", 2.0, {"split_factor": 2.0}),
+    ("-c", 100, {"max_occ": 100}),
+    ("-A", 2, {"match": 2}),
+    ("-B", 5, {"mismatch": 5}),
+    ("-O", "7,8", {"o_del": 7, "o_ins": 8}),
+    ("-O", 9, {"o_del": 9, "o_ins": 9}),
+    ("-E", "2,3", {"e_del": 2, "e_ins": 3}),
+    ("-L", "4,6", {"pen_clip5": 4, "pen_clip3": 6}),
+    ("-d", 200, {"zdrop": 200}),
+    ("-T", 40, {"min_score": 40}),
+    ("-U", 9, {"pen_unpaired": 9}),
+    ("-R", "@RG\tID:x", {"read_group": "@RG\tID:x"}),
+]
+
+
+@pytest.mark.parametrize("flag,value,fields", FLAG_CASES)
+def test_every_bwa_flag_lands(flag, value, fields):
+    opt = AlignOptions.from_flags({flag: value})
+    for name, want in fields.items():
+        assert getattr(opt, name) == want, (flag, name)
+    # nothing else moved
+    for f in dataclasses.fields(AlignOptions):
+        if f.name not in fields:
+            assert getattr(opt, f.name) == getattr(AlignOptions(), f.name)
+
+
+def test_flag_map_is_total():
+    """Every flag in the table parses; unknown flags and bad arity fail."""
+    for flag in BWA_FLAGS:
+        AlignOptions.from_flags({flag: "@RG\tID:x" if flag == "-R" else 6})
+    with pytest.raises(ValueError, match="unknown bwa flag"):
+        AlignOptions.from_flags({"-Z": 1})
+    with pytest.raises(ValueError, match="INT"):
+        AlignOptions.from_flags({"-O": "1,2,3"})
+    # None values are skipped (argparse defaults)
+    assert AlignOptions.from_flags({"-k": None}) == AlignOptions()
+
+
+def test_projections_reproduce_stage_defaults():
+    opt = AlignOptions()
+    assert opt.mem_options() == MemOptions()
+    assert opt.chain_options() == ChainOptions()
+    assert opt.bsw_params() == BSWParams()
+    assert opt.pipeline_options() == PipelineOptions()
+    assert opt.pe_options() == PEOptions()
+
+
+def test_projections_carry_changes():
+    opt = AlignOptions.from_flags({"-k": 21, "-w": 80, "-B": 6, "-T": 25})
+    assert opt.mem_options().min_seed_len == 21
+    assert opt.chain_options().min_seed_len == 21
+    assert opt.chain_options().w == 80
+    assert opt.bsw_params().w == 80
+    assert opt.bsw_params().b == 6
+    assert opt.pipeline_options().min_score == 25
+    assert opt.pe_options().min_score == 25
+
+
+def test_min_score_threading(world):
+    """-T actually gates emission (was hard-coded 30 pre-facade)."""
+    idx, reads, _ = world
+    strict = Aligner.from_index(idx, AlignOptions(min_score=10_000))
+    assert all(r.is_unmapped for r in strict.align(reads).records())
+
+
+def test_options_frozen_and_replace():
+    opt = AlignOptions()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opt.min_seed_len = 1
+    assert opt.replace(engine="baseline").engine == "baseline"
+
+
+# ---------------------------------------------------------------------
+# Satellite: per-read lens honored (pad masking)
+# ---------------------------------------------------------------------
+
+def test_mixed_length_batch_honors_lens(world):
+    idx, reads, _ = world
+    al = Aligner.from_index(idx)
+    lens = np.full(len(reads), reads.shape[1], np.int64)
+    lens[1], lens[4], lens[7] = 71, 81, 71
+    padded = reads.copy()
+    for r in range(len(reads)):
+        padded[r, lens[r]:] = 4
+    batch = ReadBatch([f"read{r}" for r in range(len(reads))], padded, lens)
+    res = al.align(batch)
+    assert res.stats["n_length_groups"] == 3
+    # each read matches a solo run at its true length
+    for r in range(len(reads)):
+        solo, _ = run_se_batched(idx, padded[r:r + 1, :lens[r]])
+        want = to_sam(padded[r:r + 1, :lens[r]], solo,
+                      names=[f"read{r}"], idx=idx)
+        got = [ln for ln in res.sam()
+               if ln.split("\t", 1)[0] == f"read{r}"]
+        assert got == want, f"read{r} diverged"
+
+
+def test_uniform_lens_single_group(world):
+    idx, reads, _ = world
+    res = Aligner.from_index(idx).align(reads)
+    assert res.stats["n_length_groups"] == 1
+
+
+def test_lens_exceeding_width_rejected(world):
+    idx, reads, _ = world
+    al = Aligner.from_index(idx)
+    bad = np.full(len(reads), reads.shape[1], np.int64)
+    bad[0] = reads.shape[1] + 10
+    with pytest.raises(ValueError, match="exceed the batch width"):
+        al.align(reads, lens=bad)
+
+
+def test_pack_reads_roundtrip():
+    reads, lens = pack_reads(["ACGT", "ACGTACGTAC"])
+    assert reads.shape == (2, 10)
+    assert lens.tolist() == [4, 10]
+    assert (reads[0, 4:] == 4).all()
+
+
+# ---------------------------------------------------------------------
+# Satellite: read-group plumbing
+# ---------------------------------------------------------------------
+
+def test_parse_read_group():
+    line, rg_id = parse_read_group(r"@RG\tID:s1\tSM:x")
+    assert line == "@RG\tID:s1\tSM:x"
+    assert rg_id == "s1"
+    # real tabs accepted too
+    assert parse_read_group("@RG\tID:a")[1] == "a"
+    with pytest.raises(ValueError, match="@RG"):
+        parse_read_group("ID:s1")
+    with pytest.raises(ValueError, match="ID:"):
+        parse_read_group(r"@RG\tSM:x")
+
+
+def test_read_group_header_and_tags(pe_world):
+    idx, r1, r2 = pe_world
+    al = Aligner.from_index(
+        idx, AlignOptions(read_group=r"@RG\tID:lane1\tSM:s"))
+    hdr = al.sam_header(cl="unit test")
+    assert "@RG\tID:lane1\tSM:s" in hdr
+    assert hdr.index("@RG\tID:lane1\tSM:s") < \
+        hdr.index([h for h in hdr if h.startswith("@PG")][0])
+    for res in (al.align(r1), al.align_pairs(r1, r2)):
+        recs = res.records()
+        assert recs and all(r.read_group == "lane1" for r in recs)
+    # tags ride AFTER the original ones: stripping them restores identity
+    plain = Aligner.from_index(idx).align_pairs(r1, r2).sam()
+    tagged = al.align_pairs(r1, r2).sam()
+    assert [ln[:-len("\tRG:Z:lane1")] for ln in tagged] == plain
+
+
+def test_no_read_group_by_default(world):
+    idx, reads, _ = world
+    al = Aligner.from_index(idx)
+    assert not any("RG:Z:" in ln for ln in al.align(reads).sam())
+    assert not any(h.startswith("@RG") for h in al.sam_header())
+    with pytest.raises(ValueError):
+        Aligner.from_index(idx, AlignOptions(read_group="bogus"))
+
+
+# ---------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------
+
+def test_engine_registry_dispatch(world):
+    idx, reads, _ = world
+    assert {"baseline", "batched"} <= set(engines())
+    calls = []
+
+    def spy_se(i, r, opt):
+        calls.append(len(r))
+        return run_se_batched(i, r, opt)
+
+    name = "test-spy"
+    register_engine(name, spy_se)
+    try:
+        res = Aligner.from_index(idx, AlignOptions(engine=name)).align(reads)
+        assert calls == [len(reads)]
+        assert res.sam() == Aligner.from_index(idx).align(reads).sam()
+        # no PE driver registered for it
+        with pytest.raises(ValueError, match="no paired-end"):
+            Aligner.from_index(idx, AlignOptions(engine=name)).align_pairs(
+                reads, reads)
+        with pytest.raises(ValueError, match="already registered"):
+            register_engine("batched", spy_se)
+    finally:
+        # keep the process-global registry pristine for later tests
+        from repro.api import _ENGINES
+        del _ENGINES[name]
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("no-such-engine")
+    with pytest.raises(ValueError, match="unknown engine"):
+        Aligner.from_index(idx, AlignOptions(engine="no-such-engine"))
+
+
+# ---------------------------------------------------------------------
+# stream_sam + constructors
+# ---------------------------------------------------------------------
+
+def test_stream_sam_mixed_batches(pe_world):
+    idx, r1, r2 = pe_world
+    al = Aligner.from_index(idx)
+    L = np.full(len(r1), r1.shape[1], np.int64)
+    batches = [
+        ReadBatch([f"se{r}" for r in range(len(r1))], r1, L),
+        PairBatch([f"p{p}" for p in range(len(r1))], r1, r2, L, L),
+    ]
+    buf = io.StringIO()
+    summary = al.stream_sam(batches, buf, cl="pytest")
+    text = buf.getvalue().rstrip("\n").split("\n")
+    hdr = [ln for ln in text if ln.startswith("@")]
+    body = [ln for ln in text if not ln.startswith("@")]
+    assert hdr == sam_header(idx) + \
+        [h for h in al.sam_header(cl="pytest") if h.startswith("@PG")]
+    assert summary["n_reads"] == 3 * len(r1)
+    assert summary["n_records"] == len(body)
+    assert summary["n_batches"] == 2
+    assert summary["stats"]["bsw_tasks"] > 0
+    want = al.align(batches[0]).sam() + al.align_pairs(batches[1]).sam()
+    assert body == want
+
+
+def test_from_fasta_and_bundle(tmp_path, world):
+    idx, reads, _ = world
+    pytest.importorskip("numpy")
+    from repro.data import simulate_reference, write_fasta
+    from repro.io.store import save_index
+    contigs = simulate_reference(8000, 2, seed=3)
+    fa = str(tmp_path / "ref.fa.gz")
+    write_fasta(fa, contigs)
+    al_fa = Aligner.from_fasta(fa)
+    save_index(fa, al_fa.index)
+    al_bundle = Aligner.from_bundle(fa)
+    r1, _, _ = simulate_pairs_multi(contigs, 6, 101, seed=4)
+    assert al_fa.align(r1).sam() == al_bundle.align(r1).sam()
+
+
+def test_shims_warn_from_caller(world):
+    """The deprecated names warn with the CALLER's module attributed, so
+    the repro.*-filtered error rule (pyproject) bites internal use only."""
+    idx, reads, _ = world
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        align_reads_optimized(idx, reads[:1])
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
