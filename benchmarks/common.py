@@ -69,3 +69,24 @@ def timeit(fn, *, repeat: int = 3, warmup: int = 1):
 def row(name: str, value, derived=""):
     ROWS.append({"name": name, "value": value, "derived": derived})
     print(f"{name},{value},{derived}", flush=True)
+
+
+def profiled_world_run(engine: str = "batched", n_reads: int | None = None):
+    """One telemetry-on ``Aligner`` pass over the cached world.
+
+    Returns ``(breakdown, snapshot, wall_s)`` — the per-stage kernel
+    breakdown that ``run.py --json`` embeds in the BENCH artifact (and
+    ``--profile`` writes as a standalone ``repro.cli report``-compatible
+    file).
+    """
+    from repro import obs
+    from repro.api import Aligner, AlignOptions
+
+    idx, reads, _ = get_world()
+    if n_reads is not None:
+        reads = reads[:n_reads]
+    al = Aligner.from_index(idx, AlignOptions(engine=engine), telemetry=True)
+    t0 = time.perf_counter()
+    res = al.align(reads)
+    wall = time.perf_counter() - t0
+    return obs.breakdown(res.stats, wall_s=wall), res.stats, wall

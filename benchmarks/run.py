@@ -4,9 +4,11 @@ Prints ``name,value,derived`` CSV rows.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only smem,sal,bsw,e2e,scaling]
 
 ``--ci`` shrinks every suite to CI-smoke sizes; ``--json PATH`` writes
-all rows (plus per-suite wall time) as JSON — the CI bench-smoke job
-uploads that file as the ``BENCH_ci.json`` artifact so the repo's perf
-trajectory is recorded per-PR.
+all rows (plus per-suite wall time and a telemetry-on per-stage
+``kernel_breakdown``) as JSON — the CI bench-smoke job uploads that file
+as the ``BENCH_ci.json`` artifact so the repo's perf trajectory is
+recorded per-PR.  ``--profile PATH`` additionally writes the same
+telemetry pass as a standalone ``repro.cli report``-compatible profile.
 """
 
 from __future__ import annotations
@@ -26,6 +28,9 @@ def main() -> None:
                     help="CI-smoke sizes for every suite")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all rows as JSON to PATH")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="also write a repro.cli-report-compatible profile "
+                         "of one telemetry-on batched-engine pass to PATH")
     args = ap.parse_args()
     if args.ci:
         # must precede the bench imports: common.py reads it at import
@@ -52,6 +57,10 @@ def main() -> None:
         fn()
         suite_s[key] = round(time.time() - t0, 1)
         print(f"# {key} done in {suite_s[key]:.1f}s", flush=True)
+    breakdown = snap = wall = None
+    if args.json or args.profile:
+        breakdown, snap, wall = common.profiled_world_run()
+        print(f"# profiled one batched pass in {wall:.2f}s", flush=True)
     if args.json:
         payload = {
             "ci_mode": args.ci,
@@ -59,10 +68,19 @@ def main() -> None:
             "platform": platform.platform(),
             "suites_s": suite_s,
             "rows": common.ROWS,
+            "kernel_breakdown": breakdown,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}", flush=True)
+    if args.profile:
+        from repro import obs
+        obs.write_profile(args.profile, snap, wall_s=wall,
+                          meta={"source": "benchmarks.run",
+                                "ci_mode": args.ci})
+        print(f"# wrote profile to {args.profile} "
+              f"(render: python -m repro.cli report {args.profile})",
+              flush=True)
 
 
 if __name__ == "__main__":

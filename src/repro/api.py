@@ -35,12 +35,14 @@ assumed one L per batch).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import sys
 from typing import Callable, Iterable
 
 import numpy as np
 
+from . import obs
 from .core.contig import sam_header as _contig_header
 from .core.pipeline import (run_pe_baseline, run_pe_batched,
                             run_se_baseline, run_se_batched)
@@ -266,16 +268,6 @@ def _coerce_pe(batch1, batch2, names):
     return r1, r2, list(names), lens
 
 
-def _merge_stats(total: dict, part: dict) -> None:
-    """Numeric stats sum; non-summable ones (e.g. per-batch insert-size
-    estimates) are collected into a list, one entry per merged part."""
-    for k, v in part.items():
-        if isinstance(v, (int, float, np.integer, np.floating)):
-            total[k] = total.get(k, 0) + v
-        else:
-            total.setdefault(k, []).append(v)
-
-
 # ---------------------------------------------------------------------
 # The facade
 # ---------------------------------------------------------------------
@@ -286,12 +278,24 @@ class Aligner:
     Construct via ``from_fasta`` (build in memory), ``from_bundle``
     (load a persisted ``repro.cli index`` bundle) or ``from_index``
     (wrap an existing FMIndex/ContigIndex).
+
+    ``telemetry`` opts into pipeline observability (``repro.obs``):
+    ``True`` for stage timers/counters, or a configured
+    ``obs.Telemetry(trace=True)`` to additionally collect Chrome trace
+    events for the whole run.  Off (``None``) by default — the
+    instrumented hot path then costs one thread-local read per stage.
     """
 
-    def __init__(self, index, options: AlignOptions | None = None):
+    def __init__(self, index, options: AlignOptions | None = None, *,
+                 telemetry: "obs.Telemetry | bool | None" = None):
         self.index = index
         self.options = options or AlignOptions()
         get_engine(self.options.engine)        # fail fast on a bad name
+        if telemetry is True:
+            telemetry = obs.Telemetry()
+        elif telemetry is False:
+            telemetry = None
+        self.telemetry: obs.Telemetry | None = telemetry
         self._rg: tuple[str, str] | None = None
         if self.options.read_group:
             self._rg = parse_read_group(self.options.read_group)
@@ -299,30 +303,43 @@ class Aligner:
     # -- constructors --
 
     @classmethod
-    def from_index(cls, index, options: AlignOptions | None = None
-                   ) -> "Aligner":
-        return cls(index, options)
+    def from_index(cls, index, options: AlignOptions | None = None,
+                   **kw) -> "Aligner":
+        return cls(index, options, **kw)
 
     @classmethod
     def from_fasta(cls, path, options: AlignOptions | None = None,
-                   **load_kw) -> "Aligner":
+                   telemetry=None, **load_kw) -> "Aligner":
         """Build the FM-index in memory from a (gzipped) FASTA."""
         from .core.contig import build_contig_index
         from .io.fasta import load_reference
         return cls(build_contig_index(load_reference(path, **load_kw)),
-                   options)
+                   options, telemetry=telemetry)
 
     @classmethod
-    def from_bundle(cls, prefix, options: AlignOptions | None = None
-                    ) -> "Aligner":
+    def from_bundle(cls, prefix, options: AlignOptions | None = None,
+                    **kw) -> "Aligner":
         """Load a persisted index bundle (``repro.cli index`` output)."""
         from .io.store import load_index
-        return cls(load_index(prefix), options)
+        return cls(load_index(prefix), options, **kw)
 
     # -- internals --
 
     def _engine(self, override: str | None) -> Engine:
         return get_engine(override or self.options.engine)
+
+    @contextlib.contextmanager
+    def _scope(self):
+        """Ambient telemetry scope for one facade call: a FRESH registry
+        (so the captured numbers are per-call and merge associatively
+        across batches/shards), sharing the run-long trace collector.
+        Yields the registry, or None when telemetry is off."""
+        if self.telemetry is None:
+            yield None
+            return
+        reg = obs.MetricsRegistry()
+        with self.telemetry.activate(reg):
+            yield reg
 
     def _tag(self, lines: list[str]) -> list[str]:
         if self._rg is None:
@@ -351,27 +368,33 @@ class Aligner:
         eng = self._engine(engine)
         popt = self.options.pipeline_options()
         B = len(reads)
-        stats: dict = {}
+        stats = obs.Snapshot()
         groups = np.unique(lens)
-        if len(groups) == 1 and int(groups[0]) == reads.shape[1]:
-            # uniform full-width batch (the common streaming case): no copy
-            results, st = eng.se(self.index, reads, popt)
-            _merge_stats(stats, st)
-            body = [self._read_lines(names[r], reads[r], results[r])
-                    for r in range(B)]
-        else:
-            results = [None] * B
-            body = [None] * B
-            for L in groups:
-                rows = np.nonzero(lens == L)[0]
-                sub = reads[rows][:, :int(L)]
-                res, st = eng.se(self.index, sub, popt)
-                _merge_stats(stats, st)
-                for row, alns in zip(rows, res):
-                    results[row] = alns
-                    body[row] = self._read_lines(names[row],
-                                                 reads[row][:int(L)], alns)
-        stats["n_length_groups"] = len(groups)
+        with self._scope() as reg:
+            if len(groups) == 1 and int(groups[0]) == reads.shape[1]:
+                # uniform full-width batch (the streaming case): no copy
+                results, st = eng.se(self.index, reads, popt)
+                stats.merge_in(st)
+                body = [self._read_lines(names[r], reads[r], results[r])
+                        for r in range(B)]
+            else:
+                results = [None] * B
+                body = [None] * B
+                for L in groups:
+                    rows = np.nonzero(lens == L)[0]
+                    sub = reads[rows][:, :int(L)]
+                    res, st = eng.se(self.index, sub, popt)
+                    stats.merge_in(st)
+                    for row, alns in zip(rows, res):
+                        results[row] = alns
+                        body[row] = self._read_lines(names[row],
+                                                     reads[row][:int(L)],
+                                                     alns)
+        if reg is not None:
+            stats.merge_in(reg.snapshot())
+        # a Gauge merges by MAX: summing group counts across batches would
+        # be meaningless, the worst per-batch count is the useful summary
+        stats["n_length_groups"] = obs.Gauge(len(groups))
         flat = self._tag([ln for rl in body for ln in rl])
         return BatchResult(names=names, lens=lens, stats=stats,
                            paired=False, alignments=results, _sam_body=flat)
@@ -391,10 +414,14 @@ class Aligner:
         eng = self._engine(engine)
         if eng.pe is None:
             raise ValueError(f"engine {eng.name!r} has no paired-end driver")
-        lines, stats = eng.pe(self.index, r1, r2,
-                              self.options.pipeline_options(),
-                              self.options.pe_options(), names)
-        return BatchResult(names=names, lens=lens, stats=dict(stats),
+        with self._scope() as reg:
+            lines, st = eng.pe(self.index, r1, r2,
+                               self.options.pipeline_options(),
+                               self.options.pe_options(), names)
+        stats = obs.Snapshot(st)
+        if reg is not None:
+            stats.merge_in(reg.snapshot())
+        return BatchResult(names=names, lens=lens, stats=stats,
                            paired=True, alignments=None,
                            _sam_body=self._tag(lines))
 
@@ -417,9 +444,12 @@ class Aligner:
         SAM to ``out`` (a path, a file object, or None for stdout).
 
         Returns a summary: n_reads/n_records/n_batches plus the merged
-        per-stage stats (numeric counters summed across batches,
-        non-summable entries like insert-size estimates collected into
-        per-batch lists).
+        per-stage stats — an ``obs.Snapshot``, so numeric counters sum
+        across batches, gauges (``n_length_groups``) keep the per-batch
+        max, and non-summable entries like insert-size estimates collect
+        into per-batch lists.  With telemetry enabled the summary also
+        carries the run-level I/O accounting (``time_io_s``, batch
+        fill/pad-waste) captured around the batch iterator pulls.
         """
         close = False
         if out is None:
@@ -429,31 +459,36 @@ class Aligner:
         else:
             fh = open(out, "w")
             close = True
-        n_reads = n_records = n_batches = max_groups = 0
-        stats: dict = {}
+        n_reads = n_records = n_batches = 0
+        stats = obs.Snapshot()
+        it = iter(batches)
+        _end = object()
         try:
             if header:
                 for ln in self.sam_header(cl=cl):
                     print(ln, file=fh)
-            for b in batches:
-                if hasattr(b, "reads1"):
-                    res = self.align_pairs(b, engine=engine)
-                    n_reads += 2 * len(b)
-                else:
-                    res = self.align(b, engine=engine)
-                    n_reads += len(b)
-                for ln in res.sam():
-                    print(ln, file=fh)
-                n_records += res.n_records
-                n_batches += 1
-                part = dict(res.stats)
-                # summing this across batches would be meaningless; the
-                # summary reports the worst (max) per-batch group count
-                ng = part.pop("n_length_groups", 0)
-                max_groups = max(max_groups, ng)
-                _merge_stats(stats, part)
-            if max_groups:
-                stats["n_length_groups"] = max_groups
+            with self._scope() as run_reg:
+                # the run-level scope catches the generator-side io
+                # instrumentation: batch packing executes inside next()
+                while True:
+                    with obs.span("io"):
+                        b = next(it, _end)
+                    if b is _end:
+                        break
+                    if hasattr(b, "reads1"):
+                        res = self.align_pairs(b, engine=engine)
+                        n_reads += 2 * len(b)
+                    else:
+                        res = self.align(b, engine=engine)
+                        n_reads += len(b)
+                    with obs.span("io"):
+                        for ln in res.sam():
+                            print(ln, file=fh)
+                    n_records += res.n_records
+                    n_batches += 1
+                    stats.merge_in(res.stats)
+            if run_reg is not None:
+                stats.merge_in(run_reg.snapshot())
             fh.flush()
         finally:
             if close:

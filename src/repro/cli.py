@@ -6,8 +6,10 @@ Two subcommands, mirroring the tool the paper accelerates::
     python -m repro.cli mem  ref.fa reads_1.fq[.gz] [reads_2.fq[.gz]]
                              [-o out.sam] [--interleaved] [--batch-size B]
                              [--shard i/n] [--engine baseline|batched]
+                             [--profile prof.json] [--trace trace.json]
                              [-k -w -r -c -A -B -O -E -L -d -T -U]
                              [-R '@RG\\tID:...']
+    python -m repro.cli report prof.json
 
 ``index`` ingests a (gzipped) multi-contig FASTA through
 ``io.fasta.load_reference`` (IUPAC ambiguity -> seeded random base, as
@@ -22,6 +24,11 @@ via ``Aligner.stream_sam`` — ``@SQ``/``@RG``/``@PG`` headers, per-record
 ``RG:Z:`` tags when ``-R`` is given, file or stdout.  ``--shard i/n``
 keeps only every n-th read (pair), the ``repro.dist`` worker partition
 (defaults to this process's rank under a multi-process jax runtime).
+
+``--profile out.json`` turns on ``repro.obs`` telemetry and writes the
+paper-style kernel-breakdown profile; ``--trace out.trace.json``
+additionally collects Chrome trace events (load the file in Perfetto or
+chrome://tracing).  ``report`` pretty-prints a saved profile.
 """
 
 from __future__ import annotations
@@ -95,8 +102,13 @@ def cmd_mem(args, argv) -> int:
     shard = read_shard(args.shard)
     if shard != (0, 1):
         _log(f"streaming shard {shard[0]}/{shard[1]}")
+    telemetry = None
+    if args.profile or args.trace:
+        from . import obs
+        telemetry = obs.Telemetry(trace=bool(args.trace))
     try:
-        aligner = Aligner.from_index(_load_or_build(args.ref), options)
+        aligner = Aligner.from_index(_load_or_build(args.ref), options,
+                                     telemetry=telemetry)
     except ValueError as e:
         _log(f"error: {e}")
         return 2
@@ -112,6 +124,33 @@ def cmd_mem(args, argv) -> int:
          f"({summary['n_records']} SAM records, "
          f"{summary['n_batches']} batches, engine={aligner.options.engine}) "
          f"in {dt:.1f}s ({summary['n_reads'] / dt:.1f} reads/s)")
+    if args.profile:
+        from . import obs
+        meta = {"engine": aligner.options.engine,
+                "reads": summary["n_reads"],
+                "batches": summary["n_batches"],
+                "shard": f"{shard[0]}/{shard[1]}",
+                "paired": args.reads2 is not None or args.interleaved}
+        obs.write_profile(args.profile, summary["stats"], wall_s=dt,
+                          meta=meta)
+        _log(f"wrote profile {args.profile} "
+             f"(render it with: repro.cli report {args.profile})")
+    if args.trace:
+        telemetry.tracer.save(args.trace)
+        _log(f"wrote {len(telemetry.tracer)} trace events to {args.trace} "
+             f"(load in Perfetto / chrome://tracing)")
+    return 0
+
+
+def cmd_report(args, argv) -> int:
+    from . import obs
+    try:
+        payload = obs.read_profile(args.profile)
+    except (OSError, ValueError, KeyError) as e:
+        _log(f"error reading {args.profile}: {e}")
+        return 2
+    print(obs.render(payload["snapshot"], wall_s=payload.get("wall_s"),
+                     meta=payload.get("meta")))
     return 0
 
 
@@ -150,6 +189,12 @@ def build_parser() -> argparse.ArgumentParser:
     mm.add_argument("--engine", default="batched",
                     help="registered alignment engine (default: batched; "
                          "see repro.api.engines())")
+    mm.add_argument("--profile", default=None, metavar="JSON",
+                    help="enable telemetry and write the kernel-breakdown "
+                         "profile here (render with `repro.cli report`)")
+    mm.add_argument("--trace", default=None, metavar="JSON",
+                    help="also collect Chrome trace events (Perfetto / "
+                         "chrome://tracing) and write them here")
     # bwa mem alignment flags (see repro.options.BWA_FLAGS)
     mm.add_argument("-k", type=int, default=None, metavar="INT",
                     help="minimum seed length [19]")
@@ -181,6 +226,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "(emits the @RG header and an RG:Z: tag on every "
                          "record)")
     mm.set_defaults(fn=cmd_mem)
+
+    rp = sub.add_parser("report", help="pretty-print a saved --profile "
+                                       "JSON (paper-style kernel breakdown)")
+    rp.add_argument("profile", help="profile JSON written by mem --profile")
+    rp.set_defaults(fn=cmd_report)
     return ap
 
 

@@ -23,6 +23,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
+
 I32 = jnp.int32
 NEG = -(1 << 28)
 
@@ -398,6 +400,8 @@ def bsw_extend_tasks(queries, targets, h0s, p: BSWParams,
         res = bsw_extend_batch(qs, ts, h0b, p, ws=wsb, qmax=qmax, tmax=tmax)
         for i, r in zip(idxs, res):
             results[i] = r
+        obs.count("bsw_dispatches")
+        obs.observe("bsw_block_lanes", len(idxs))
         stats["tasks"] += len(idxs)
         stats["cells_useful"] += int((np.array([len(q) for q in qs]) *
                                       np.array([len(t) for t in ts])).sum())

@@ -12,6 +12,8 @@ import dataclasses
 
 import numpy as np
 
+from .. import obs
+
 
 def _block_of(edges: np.ndarray, pos: int) -> int:
     """Index of the contig block (see core.contig) containing ``pos``."""
@@ -113,6 +115,7 @@ def chain_seeds(seeds, l_pac: int, opt: ChainOptions,
             chains.append(Chain(seeds=[seed]))
     for c in chains:
         c.weight = chain_weight(c)
+    obs.count("chains_built", len(chains))
     return chains
 
 
@@ -144,4 +147,5 @@ def filter_chains(chains: list[Chain], opt: ChainOptions) -> list[Chain]:
             kept.append(c)
     # restore deterministic (rbeg, qbeg) order for downstream extension
     kept.sort(key=lambda c: (c.rbeg, c.qbeg))
+    obs.count("chains_kept", len(kept))
     return kept

@@ -32,6 +32,7 @@ from typing import Callable
 
 import numpy as np
 
+from .. import obs
 from . import smem as smem_mod
 from . import sal as sal_mod
 from .bsw import BSWParams, ExtResult, bsw_extend, bsw_extend_tasks
@@ -223,7 +224,7 @@ class BatchedBSWExecutor:
         self.block = block
         self.sort = sort
         self.table: dict = {}
-        self.stats = dict(tasks=0, cells_useful=0, cells_total=0)
+        self.stats = obs.Snapshot(tasks=0, cells_useful=0, cells_total=0)
 
     def _run(self, tasks: dict):
         """tasks: key -> (q, t, h0, w). Executes batched, fills self.table."""
@@ -237,8 +238,7 @@ class BatchedBSWExecutor:
                                    block=self.block, sort=self.sort)
         for k, r in zip(keys, res):
             self.table[k] = r
-        for name in self.stats:
-            self.stats[name] += st[name]
+        self.stats.merge_in(st)
 
     def plan_and_run(self, jobs):
         """jobs: list of (job_id, chain, query, idx).
@@ -434,44 +434,49 @@ def run_se_baseline(idx: FMIndex, reads: np.ndarray,
     l_pac = idx.n_ref
     edges = contig_edges(idx)
     elist = edges.tolist()          # scalar bisect beats np in this loop
-    stats = dict(sa_lookups=0, bsw_tasks=0)
+    stats = obs.Snapshot(sa_lookups=0, bsw_tasks=0)
     bsw_fn_factory = _bsw_immediate(opt.bsw)
     results = []
     for r in range(len(reads)):
         q = reads[r]
-        mems = smem_mod.collect_smems(idx, q, opt.mem)
-        frep = smem_mod.frac_rep(mems, len(q), opt.mem.max_occ)
+        with obs.span("smem"):
+            mems = smem_mod.collect_smems(idx, q, opt.mem)
+            frep = smem_mod.frac_rep(mems, len(q), opt.mem.max_occ)
         # SAL (compressed baseline, one lookup at a time)
-        seeds = []
-        for (k, l, s, qb, qe) in mems:
-            step = s // opt.mem.max_occ if s > opt.mem.max_occ else 1
-            cnt = 0
-            kk = 0
-            while kk < s and cnt < opt.mem.max_occ:
-                rbeg, _ = idx.sa_lookup_compressed(k + kk)
-                stats["sa_lookups"] += 1
-                slen = qe - qb
-                # same-block test (bwa's boundary-bridging seed drop; the
-                # scalar form of core.contig.seed_within_contig)
-                if bisect.bisect_right(elist, rbeg) == \
-                        bisect.bisect_right(elist, rbeg + slen - 1):
-                    seeds.append((int(rbeg), qb, slen))
-                kk += step
-                cnt += 1
-        chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain, edges),
-                               opt.chain)
+        with obs.span("sal"):
+            seeds = []
+            for (k, l, s, qb, qe) in mems:
+                step = s // opt.mem.max_occ if s > opt.mem.max_occ else 1
+                cnt = 0
+                kk = 0
+                while kk < s and cnt < opt.mem.max_occ:
+                    rbeg, _ = idx.sa_lookup_compressed(k + kk)
+                    stats["sa_lookups"] += 1
+                    slen = qe - qb
+                    # same-block test (bwa's boundary-bridging seed drop;
+                    # the scalar form of core.contig.seed_within_contig)
+                    if bisect.bisect_right(elist, rbeg) == \
+                            bisect.bisect_right(elist, rbeg + slen - 1):
+                        seeds.append((int(rbeg), qb, slen))
+                    kk += step
+                    cnt += 1
+        with obs.span("chain"):
+            chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain,
+                                               edges), opt.chain)
         alns: list[Alignment] = []
         counting = [0]
         def counting_fn(side, seed_id, rnd, qq, tt, h0, w,
                         _f=bsw_fn_factory, _c=counting):
             _c[0] += 1
             return _f(side, seed_id, rnd, qq, tt, h0, w)
-        for c in chains:
-            alns.extend(chain2aln(c, q, idx, opt.bsw, counting_fn))
+        with obs.span("bsw"):
+            for c in chains:
+                alns.extend(chain2aln(c, q, idx, opt.bsw, counting_fn))
         stats["bsw_tasks"] += counting[0]
-        results.append(mark_and_finalize(alns, q, S, l_pac, opt.bsw,
-                                         opt.mem.min_seed_len, frep=frep,
-                                         min_score=opt.min_score))
+        with obs.span("finalize"):
+            results.append(mark_and_finalize(alns, q, S, l_pac, opt.bsw,
+                                             opt.mem.min_seed_len, frep=frep,
+                                             min_score=opt.min_score))
     return results, stats
 
 
@@ -484,38 +489,44 @@ def run_se_batched(idx: FMIndex, reads: np.ndarray,
     R, L = reads.shape
     lens = np.full(R, L, np.int64)
     # Stage 1: batched SMEM (optimized eta=32 occ; numpy backend on CPU)
-    mems = smem_mod.collect_smems_batch(idx, reads, lens, opt.mem,
-                                        occ_fn=occ_opt_np)
+    with obs.span("smem", reads=R):
+        mems = smem_mod.collect_smems_batch(idx, reads, lens, opt.mem,
+                                            occ_fn=occ_opt_np)
     # Stage 2: batched SAL (uncompressed SA, one gather for everything)
-    seeds_per_read, n_lookups = sal_mod.seeds_from_intervals(
-        idx, mems, opt.mem.max_occ, compressed=False)
+    with obs.span("sal"):
+        seeds_per_read, n_lookups = sal_mod.seeds_from_intervals(
+            idx, mems, opt.mem.max_occ, compressed=False)
     # Stage 3: chaining (shared scalar code)
-    chains_per_read = []
-    jobs = []
-    for r in range(R):
-        seeds = [(rb, qb, ln) for (rb, qb, ln, s) in seeds_per_read[r]]
-        chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain, edges),
-                               opt.chain)
-        chains_per_read.append(chains)
-        for ci, c in enumerate(chains):
-            jobs.append(((r, ci), c, reads[r], idx))
+    with obs.span("chain"):
+        chains_per_read = []
+        jobs = []
+        for r in range(R):
+            seeds = [(rb, qb, ln) for (rb, qb, ln, s) in seeds_per_read[r]]
+            chains = filter_chains(chain_seeds(seeds, l_pac, opt.chain,
+                                               edges), opt.chain)
+            chains_per_read.append(chains)
+            for ci, c in enumerate(chains):
+                jobs.append(((r, ci), c, reads[r], idx))
     # Stage 4: batched inter-task BSW with length sorting
     execu = BatchedBSWExecutor(opt.bsw, block=opt.bsw_block, sort=opt.bsw_sort)
-    execu.plan_and_run(jobs)
+    with obs.span("bsw", jobs=len(jobs)):
+        execu.plan_and_run(jobs)
     # Stage 5: decision replay + SAM-FORM
-    results = []
-    for r in range(R):
-        alns: list[Alignment] = []
-        for ci, c in enumerate(chains_per_read[r]):
-            alns.extend(chain2aln(c, reads[r], idx, opt.bsw,
-                                  execu.executor((r, ci))))
-        frep = smem_mod.frac_rep(mems[r], L, opt.mem.max_occ)
-        results.append(mark_and_finalize(alns, reads[r], S, l_pac, opt.bsw,
-                                         opt.mem.min_seed_len, frep=frep,
-                                         min_score=opt.min_score))
-    stats = dict(sa_lookups=n_lookups, bsw_tasks=execu.stats["tasks"],
-                 cells_useful=execu.stats["cells_useful"],
-                 cells_total=execu.stats["cells_total"])
+    with obs.span("finalize"):
+        results = []
+        for r in range(R):
+            alns: list[Alignment] = []
+            for ci, c in enumerate(chains_per_read[r]):
+                alns.extend(chain2aln(c, reads[r], idx, opt.bsw,
+                                      execu.executor((r, ci))))
+            frep = smem_mod.frac_rep(mems[r], L, opt.mem.max_occ)
+            results.append(mark_and_finalize(alns, reads[r], S, l_pac,
+                                             opt.bsw, opt.mem.min_seed_len,
+                                             frep=frep,
+                                             min_score=opt.min_score))
+    stats = obs.Snapshot(sa_lookups=n_lookups, bsw_tasks=execu.stats["tasks"],
+                         cells_useful=execu.stats["cells_useful"],
+                         cells_total=execu.stats["cells_total"])
     return results, stats
 
 
@@ -531,7 +542,7 @@ def run_pe_baseline(idx: FMIndex, reads1: np.ndarray,
     res2, s2 = run_se_baseline(idx, reads2, opt)
     lines, pstats = pair_pipeline(idx, reads1, reads2, res1, res2, opt,
                                   pe_opt, batched=False, names=names)
-    stats = {k: s1[k] + s2[k] for k in s1}
+    stats = obs.Snapshot.merge_all([s1, s2])
     stats.update(pstats)
     return lines, stats
 
@@ -552,7 +563,7 @@ def run_pe_batched(idx: FMIndex, reads1: np.ndarray,
     res1, res2 = res[:n], res[n:]
     lines, pstats = pair_pipeline(idx, reads1, reads2, res1, res2, opt,
                                   pe_opt, batched=True, names=names)
-    stats = dict(s)
+    stats = obs.Snapshot(s)
     stats.update(pstats)
     return lines, stats
 

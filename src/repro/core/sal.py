@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .fmindex import FMArrays, SENTINEL, SA_SAMPLE, I32
 
 
@@ -96,6 +97,8 @@ def seeds_from_intervals(idx, mems_per_read, max_occ: int, *,
                 cnt += 1
     if not rows_all:
         return [[] for _ in mems_per_read], 0
+    obs.count("sal_dispatches")
+    obs.count("sal_rows", len(rows_all))
     rows = jnp.asarray(np.asarray(rows_all, np.int32))
     if compressed:
         vals, _ = sal_compressed(fm, rows, occ_eta32=occ_eta32)

@@ -27,6 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from .fmindex import (FMIndex, FMArrays, backward_ext_np, backward_ext_v,
                       forward_ext_np, forward_ext_v, occ_base_np,
                       occ_opt_np, occ_opt_v, I32)
@@ -245,9 +246,11 @@ def _ext_round(idx: FMIndex, which: str, k, l, s, c, occ_fn):
     per-round device dispatch — the CPU-pipeline fast path.  The jax
     backend is what a TPU host loop would use (and what the fmocc Pallas
     kernel implements)."""
+    obs.count("smem_rounds")
     if occ_fn in _NUMPY_OCC:
         fn = forward_ext_np if which == "fwd" else backward_ext_np
         return fn(idx, k, l, s, c, occ_np=occ_fn)
+    obs.count("smem_occ_dispatches")
     jf = _fwd_round_j if which == "fwd" else _bwd_round_j
     out = jf(idx.device(), jnp.asarray(k, I32.dtype),
              jnp.asarray(l, I32.dtype), jnp.asarray(s, I32.dtype),

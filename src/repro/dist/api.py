@@ -100,7 +100,8 @@ def read_shard(spec: str | None = None) -> tuple[int, int]:
 def align_shard(aligner, reads1, reads2=None, out=None, *,
                 spec: str | None = None, batch_size: int = 512,
                 interleaved: bool = False, header: bool = True,
-                cl: str | None = None) -> dict:
+                cl: str | None = None, monitor=None,
+                step: int = 0) -> dict:
     """Stream THIS worker's shard of a FASTQ through an ``Aligner``.
 
     The worker-level building block for multi-worker ``mem``: n processes
@@ -108,13 +109,29 @@ def align_shard(aligner, reads1, reads2=None, out=None, *,
     output path (shard resolution as in :func:`read_shard` — explicit
     ``spec`` or jax process rank) and together cover every read exactly
     once; merging the per-shard SAMs is the remaining ROADMAP item.
-    Returns ``Aligner.stream_sam``'s summary dict.
+
+    Returns ``Aligner.stream_sam``'s summary dict extended with the
+    shard identity and its wall time (``shard``, ``wall_s``) — the
+    ``stats`` entry is an ``obs.Snapshot``, so per-shard summaries merge
+    deterministically (``Snapshot.merge_all``) into a run-wide profile.
+    When an ``ft.straggler.StragglerMonitor`` is passed, the shard's
+    wall time feeds its rolling distribution (``monitor.observe``) and a
+    detected straggle event is surfaced as ``straggler`` in the summary.
     """
+    import time as _time
     from ..io.stream import open_batches   # deferred: keep dist jax-light
     shard = read_shard(spec)
     batches = open_batches(reads1, reads2, batch_size=batch_size,
                            interleaved=interleaved, shard=shard)
-    return aligner.stream_sam(batches, out, header=header, cl=cl)
+    t0 = _time.perf_counter()
+    summary = aligner.stream_sam(batches, out, header=header, cl=cl)
+    wall = _time.perf_counter() - t0
+    summary["shard"] = shard
+    summary["wall_s"] = wall
+    if monitor is not None:
+        summary["straggler"] = monitor.observe(step, host=shard[0],
+                                               step_time=wall)
+    return summary
 
 
 def constrain(x, *axes):

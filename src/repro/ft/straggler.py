@@ -44,7 +44,15 @@ class StragglerMonitor:
         self._t0 = time.perf_counter()
 
     def end_step(self, step: int, host: int = 0) -> StragglerEvent | None:
-        dt = time.perf_counter() - self._t0
+        return self.observe(step, host, time.perf_counter() - self._t0)
+
+    def observe(self, step: int, host: int = 0,
+                step_time: float = 0.0) -> StragglerEvent | None:
+        """Feed one externally-measured step time (e.g. a shard's wall
+        time from ``dist.api.align_shard``) into the rolling distribution
+        — same detection logic as the start_step/end_step pair, usable
+        when the caller already has real telemetry."""
+        dt = float(step_time)
         self.times.append(dt)
         if len(self.times) < max(8, self.window // 4):
             return None

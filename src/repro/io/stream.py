@@ -30,10 +30,26 @@ from typing import Iterator
 
 import numpy as np
 
+from .. import obs
 from .fastq import (encode_read, pair_qname, read_fastq,
                     read_fastq_interleaved, read_fastq_paired)
 
 PAD_CODE = 4                        # ambiguity code: seeds nothing, clips out
+
+
+def _note_batch(n_reads: int, cells: int, base_count: int) -> None:
+    """Telemetry for one packed batch: fill/pad-waste accounting (the
+    batched engines compute over the padded rectangle, so wasted pad
+    fraction is lost device work — same accounting as BSW Table 8).
+    No-ops unless an ``obs`` scope is active (``Aligner.stream_sam``
+    activates one around its ``next()`` pulls)."""
+    obs.count("io_batches")
+    obs.count("io_reads", n_reads)
+    obs.count("io_cells", cells)
+    obs.count("io_cells_pad", cells - base_count)
+    if cells:
+        obs.observe("io_pad_frac", (cells - base_count) / cells,
+                    edges=obs.RATIO_EDGES)
 
 
 @dataclasses.dataclass
@@ -104,10 +120,12 @@ def stream_batches(path, batch_size: int = 512, *,
         seqs.append(rec.seq)
         if len(names) == batch_size:
             reads, lens = pack_reads(seqs)
+            _note_batch(len(names), reads.size, int(lens.sum()))
             yield ReadBatch(names, reads, lens)
             names, seqs = [], []
     if names:
         reads, lens = pack_reads(seqs)
+        _note_batch(len(names), reads.size, int(lens.sum()))
         yield ReadBatch(names, reads, lens)
 
 
@@ -133,6 +151,8 @@ def stream_pair_batches(path1, path2=None, batch_size: int = 512, *,
         w = max(max(map(len, s1)), max(map(len, s2)))
         reads1, lens1 = pack_reads(s1, w)
         reads2, lens2 = pack_reads(s2, w)
+        _note_batch(2 * len(names), reads1.size + reads2.size,
+                    int(lens1.sum() + lens2.sum()))
         return PairBatch(list(names), reads1, reads2, lens1, lens2)
 
     for r1, r2 in _sharded(pairs, shard):

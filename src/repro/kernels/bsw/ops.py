@@ -5,6 +5,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.bsw import BSWParams, ExtResult, adjusted_band
 from .kernel import bsw_pallas_call, LANES
 
@@ -13,6 +14,12 @@ def bsw_extend_pallas(queries, targets, h0s, p: BSWParams, ws=None,
                       interpret: bool = True):
     """Drop-in equivalent of ``core.bsw.bsw_extend_batch`` that runs the
     Pallas kernel (interpret=True executes the kernel body on CPU)."""
+    with obs.span("kernel.bsw_pallas", cat="kernel", lanes=len(queries)):
+        obs.count("kernel_bsw_dispatches")
+        return _bsw_extend_pallas(queries, targets, h0s, p, ws, interpret)
+
+
+def _bsw_extend_pallas(queries, targets, h0s, p, ws, interpret):
     W = len(queries)
     qlens = np.array([len(q) for q in queries], np.int32)
     tlens = np.array([len(t) for t in targets], np.int32)

@@ -1,4 +1,13 @@
-"""jit'd wrappers: Pallas-backed occ and full backward extension."""
+"""jit'd wrappers: Pallas-backed occ and full backward extension.
+
+The public entry points (``occ_pallas`` / ``backward_ext_pallas``) are
+plain Python wrappers around the jitted implementations so telemetry can
+run OUTSIDE the jit boundary — a jitted body only executes Python at
+trace time, so spans/counters placed inside it would record nothing on
+cached calls.  With telemetry off the wrappers add one thread-local read;
+with it on they count device dispatches and time the call to completion
+(``block_until_ready``, so the span measures compute, not dispatch).
+"""
 
 from __future__ import annotations
 
@@ -7,13 +16,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.fmindex import FMArrays, I32
 from .kernel import occ_count_pallas_call, QB
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def occ_pallas(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
-               interpret: bool = True) -> jnp.ndarray:
+def _occ_impl(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
+              interpret: bool = True) -> jnp.ndarray:
     """Occ(c, i) over flat query vectors via the Pallas compare+count kernel.
 
     XLA performs the bucket gather (one vectorized load per lockstep round
@@ -38,8 +47,11 @@ def occ_pallas(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
     return out[:T].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def backward_ext_pallas(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
+_occ_pallas_jit = functools.partial(
+    jax.jit(_occ_impl, static_argnames=("interpret",)))
+
+
+def _backward_ext_impl(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
     """Full bi-interval backward extension with Pallas occ (kernel analogue
     of core.fmindex.backward_ext_v)."""
     k = k.astype(I32); l = l.astype(I32); s = s.astype(I32)
@@ -48,8 +60,8 @@ def backward_ext_pallas(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
     c4 = jnp.broadcast_to(jnp.arange(4, dtype=I32), batch + (4,))
     i1 = jnp.broadcast_to((k - 1)[..., None], batch + (4,))
     i2 = jnp.broadcast_to((k + s - 1)[..., None], batch + (4,))
-    o1 = occ_pallas(fm, c4, i1, interpret=interpret)
-    o2 = occ_pallas(fm, c4, i2, interpret=interpret)
+    o1 = _occ_impl(fm, c4, i1, interpret=interpret)
+    o2 = _occ_impl(fm, c4, i2, interpret=interpret)
     ks = fm.C + o1
     ss = o2 - o1
     sent = ((k <= fm.primary) & (fm.primary < k + s)).astype(I32)
@@ -61,3 +73,30 @@ def backward_ext_pallas(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
     take = lambda a_: jnp.take_along_axis(a_, cc[..., None], axis=-1)[..., 0]
     s_out = jnp.where(c > 3, 0, take(ss))
     return take(ks), take(ls), s_out
+
+
+_backward_ext_pallas_jit = jax.jit(_backward_ext_impl,
+                                   static_argnames=("interpret",))
+
+
+def occ_pallas(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
+               interpret: bool = True) -> jnp.ndarray:
+    """Public Occ(c, i) entry point (see module docstring)."""
+    if not obs.enabled():
+        return _occ_pallas_jit(fm, c, i, interpret=interpret)
+    with obs.span("kernel.fmocc", cat="kernel"):
+        obs.count("kernel_fmocc_dispatches")
+        out = _occ_pallas_jit(fm, c, i, interpret=interpret)
+        jax.block_until_ready(out)
+    return out
+
+
+def backward_ext_pallas(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
+    """Public backward-extension entry point (see module docstring)."""
+    if not obs.enabled():
+        return _backward_ext_pallas_jit(fm, k, l, s, c, interpret=interpret)
+    with obs.span("kernel.fmocc_bwd", cat="kernel"):
+        obs.count("kernel_fmocc_dispatches")
+        out = _backward_ext_pallas_jit(fm, k, l, s, c, interpret=interpret)
+        jax.block_until_ready(out)
+    return out

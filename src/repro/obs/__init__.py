@@ -1,0 +1,36 @@
+"""repro.obs — zero-dependency pipeline telemetry.
+
+Three layers (see the module docstrings for detail):
+
+* ``metrics`` — ``MetricsRegistry`` sink + associatively-mergeable
+  ``Snapshot`` (the structured ``stats`` object the facade returns);
+* ``trace`` — ambient ``span``/``count``/``observe`` helpers, the
+  ``Telemetry`` handle, and a Chrome-trace-event ``TraceCollector``;
+* ``report`` — the paper-style kernel-breakdown renderer and the
+  ``--profile`` JSON artifact.
+
+Instrumented pipeline code imports only the cheap ambient helpers::
+
+    from repro import obs
+    with obs.span("smem"):
+        ...
+        obs.count("smem_rounds", rounds)
+
+which are no-ops (one thread-local read) unless a scope is active.
+"""
+
+from .metrics import (DEFAULT_EDGES, RATIO_EDGES, Gauge, Hist,
+                      MetricsRegistry, MultiValue, Snapshot)
+from .report import (STAGES, breakdown, read_profile, render, stage_times,
+                     write_profile)
+from .trace import (NULL_SPAN, Telemetry, TraceCollector, activate, count,
+                    current, enabled, observe, set_gauge, span)
+
+__all__ = [
+    "DEFAULT_EDGES", "RATIO_EDGES", "Gauge", "Hist", "MetricsRegistry",
+    "MultiValue", "Snapshot",
+    "STAGES", "breakdown", "read_profile", "render", "stage_times",
+    "write_profile",
+    "NULL_SPAN", "Telemetry", "TraceCollector", "activate", "count",
+    "current", "enabled", "observe", "set_gauge", "span",
+]

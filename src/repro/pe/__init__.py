@@ -14,6 +14,7 @@ Entry points live on the pipeline: ``align_pairs_baseline`` /
 ``align_pairs_optimized`` in ``repro.core.pipeline``.
 """
 
+from .. import obs
 from .pestat import PairStat, estimate_pestat, infer_dir  # noqa: F401
 from .rescue import (PEOptions, RescueTask, best_diag_seed,  # noqa: F401
                      merge_rescues, plan_rescues, rescue_window,
@@ -37,26 +38,29 @@ def pair_pipeline(idx, reads1, reads2, res1, res2, opt, peopt=None, *,
     """
     peopt = peopt or PEOptions()
     p = opt.bsw
-    pes = estimate_pestat(res1, res2, idx, max_ins=peopt.max_ins)
-    tasks = plan_rescues((res1, res2), (reads1, reads2), pes, idx, peopt)
-    if batched:
-        outs, rstats = run_rescues_batched(tasks, idx, p,
-                                           block=opt.bsw_block,
-                                           sort=opt.bsw_sort)
-    else:
-        outs, rstats = run_rescues_scalar(tasks, idx, p)
-    n_rescued = merge_rescues((res1, res2), tasks, outs, idx, p,
-                              opt.mem.min_seed_len, peopt)
+    with obs.span("pe_stat"):
+        pes = estimate_pestat(res1, res2, idx, max_ins=peopt.max_ins)
+    with obs.span("pe_rescue"):
+        tasks = plan_rescues((res1, res2), (reads1, reads2), pes, idx, peopt)
+        if batched:
+            outs, rstats = run_rescues_batched(tasks, idx, p,
+                                               block=opt.bsw_block,
+                                               sort=opt.bsw_sort)
+        else:
+            outs, rstats = run_rescues_scalar(tasks, idx, p)
+        n_rescued = merge_rescues((res1, res2), tasks, outs, idx, p,
+                                  opt.mem.min_seed_len, peopt)
     lines: list[str] = []
     n_proper = 0
-    for pid in range(len(reads1)):
-        qname = names[pid] if names else f"pair{pid}"
-        two, proper = emit_pair(qname, reads1[pid], reads2[pid],
-                                res1[pid], res2[pid], pes, idx,
-                                p.a, peopt.pen_unpaired,
-                                mapq_blend=peopt.mapq_blend)
-        lines.extend(two)
-        n_proper += int(proper)
+    with obs.span("pe_pair"):
+        for pid in range(len(reads1)):
+            qname = names[pid] if names else f"pair{pid}"
+            two, proper = emit_pair(qname, reads1[pid], reads2[pid],
+                                    res1[pid], res2[pid], pes, idx,
+                                    p.a, peopt.pen_unpaired,
+                                    mapq_blend=peopt.mapq_blend)
+            lines.extend(two)
+            n_proper += int(proper)
     stats = dict(rstats)
     stats.update(n_rescued=n_rescued, n_proper=n_proper,
                  pes_failed=[s.failed for s in pes],

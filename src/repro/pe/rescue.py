@@ -28,6 +28,7 @@ import dataclasses
 
 import numpy as np
 
+from .. import obs
 from ..core.bsw import BSWParams
 from ..core.chain import Chain
 from ..core.contig import block_bounds, same_contig
@@ -164,9 +165,11 @@ def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],
                                           peopt.rescue_min_seed)
                     if seed is None:
                         continue
+                    obs.observe("rescue_window_bp", win[1] - win[0])
                     tasks.append(RescueTask(pair_id=pid, end=other, r=r,
                                             chain=Chain(seeds=[seed]),
                                             query=mate))
+    obs.count("rescue_planned", len(tasks))
     return tasks
 
 
