@@ -16,8 +16,6 @@ import pathlib
 
 from .common import row, scaled, timeit, get_world  # noqa: F401  (path setup)
 
-import numpy as np  # noqa: E402
-
 import io  # noqa: E402
 
 from repro.api import Aligner  # noqa: E402

@@ -14,8 +14,6 @@ SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-import numpy as np  # noqa: E402
-
 from repro.core import fmindex as fmx  # noqa: E402
 from repro.data import make_reference, simulate_reads  # noqa: E402
 

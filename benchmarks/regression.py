@@ -1,0 +1,137 @@
+"""Bench regression gate: compare a fresh --json payload to a committed
+baseline (``benchmarks/baseline_ci.json``).
+
+CI runners differ wildly in absolute speed, so raw timings are never
+compared — the gate checks what IS stable across machines:
+
+* structure — every baseline row/stage/counter still exists (and no
+  unreviewed new rows appear: adding a benchmark means regenerating the
+  committed baseline in the same PR);
+* determinism — count rows (task totals, dispatch counts) and boolean
+  rows (``e2e.identical_output``) match exactly: the CI workloads are
+  seeded, so any drift is a behavior change, not noise;
+* shape — utilization fractions stay within an absolute tolerance, and
+  speedup ratios (same-machine timing ratios) stay within a wide
+  multiplicative band;
+* kernel breakdowns — the stage set is unchanged and every stage that
+  did work in the baseline still does work (a kernel silently falling
+  out of the pipeline shows up as its stage going to zero).
+
+``compare`` returns (failures, notes); ``render`` formats them.  The
+remedy for an INTENDED change is regenerating the baseline:
+
+    PYTHONPATH=src python -m benchmarks.run --ci --json benchmarks/baseline_ci.json
+"""
+
+from __future__ import annotations
+
+TIMING_MARKERS = ("_s", "_per_s", "us_per", "ns_per", "ms_per")
+SPEEDUP_BAND = 3.0     # speedup rows: within [base/3, base*3]
+FRAC_TOL = 0.05        # utilization-fraction rows: |fresh - base| <= 0.05
+
+
+def _is_timing(name: str) -> bool:
+    return any(m in name for m in TIMING_MARKERS)
+
+
+def _num(v):
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+def _compare_row(name: str, fresh, base, failures, notes):
+    fv, bv = _num(fresh), _num(base)
+    if _is_timing(name):
+        notes.append(f"  ~ {name}: timing row, not compared "
+                     f"({base} -> {fresh})")
+        return
+    if fv is None or bv is None:               # non-numeric: exact
+        if str(fresh) != str(base):
+            failures.append(f"row {name}: {base!r} -> {fresh!r}")
+        return
+    if "speedup" in name:
+        lo, hi = bv / SPEEDUP_BAND, bv * SPEEDUP_BAND
+        if not (lo <= fv <= hi):
+            failures.append(f"row {name}: {fv:g} outside "
+                            f"[{lo:g}, {hi:g}] (baseline {bv:g})")
+        return
+    if "frac" in name or "util" in name:
+        if abs(fv - bv) > FRAC_TOL:
+            failures.append(f"row {name}: {fv:g} vs baseline {bv:g} "
+                            f"(tolerance ±{FRAC_TOL})")
+        return
+    if fv != bv:                               # counts / booleans: exact
+        failures.append(f"row {name}: {fv:g} != baseline {bv:g}")
+
+
+def _compare_breakdown(key: str, fresh, base, failures):
+    if base is None:
+        return
+    if fresh is None:
+        failures.append(f"{key}: missing from fresh payload")
+        return
+    bstages = {s["stage"]: s for s in base.get("stages", [])}
+    fstages = {s["stage"]: s for s in fresh.get("stages", [])}
+    for name in sorted(set(bstages) - set(fstages)):
+        failures.append(f"{key}: stage {name!r} disappeared")
+    for name in sorted(set(fstages) - set(bstages)):
+        failures.append(f"{key}: new stage {name!r} "
+                        f"(regenerate the baseline)")
+    for name, bs in bstages.items():
+        fs = fstages.get(name)
+        if fs and bs.get("time_s", 0) > 0 and not fs.get("time_s", 0) > 0:
+            failures.append(f"{key}: stage {name!r} did work in the "
+                            f"baseline but measured 0s now")
+    bkern = base.get("kernels") or {}
+    fkern = fresh.get("kernels") or {}
+    for name in sorted(set(bkern) - set(fkern)):
+        failures.append(f"{key}: kernel span {name!r} disappeared "
+                        f"(its Pallas path no longer runs)")
+    bcnt = base.get("counters") or {}
+    fcnt = fresh.get("counters") or {}
+    for name in sorted(set(bcnt) - set(fcnt)):
+        failures.append(f"{key}: counter {name!r} disappeared")
+    for name, bval in bcnt.items():
+        if name in fcnt and fcnt[name] != bval:
+            failures.append(f"{key}: counter {name} = {fcnt[name]} "
+                            f"!= baseline {bval}")
+
+
+def compare(payload: dict, baseline: dict):
+    """-> (failures, notes): empty failures means the gate passes."""
+    failures: list[str] = []
+    notes: list[str] = []
+    if payload.get("ci_mode") != baseline.get("ci_mode"):
+        failures.append(f"ci_mode mismatch: baseline "
+                        f"{baseline.get('ci_mode')} vs {payload.get('ci_mode')}"
+                        f" — sizes are not comparable")
+        return failures, notes
+    brows = {r["name"]: r for r in baseline.get("rows", [])}
+    frows = {r["name"]: r for r in payload.get("rows", [])}
+    for name in sorted(set(brows) - set(frows)):
+        failures.append(f"row {name!r} disappeared from the fresh payload")
+    for name in sorted(set(frows) - set(brows)):
+        failures.append(f"new row {name!r} (regenerate the baseline)")
+    for name in sorted(set(brows) & set(frows)):
+        _compare_row(name, frows[name]["value"], brows[name]["value"],
+                     failures, notes)
+    for key in ("kernel_breakdown", "kernel_breakdown_pallas"):
+        _compare_breakdown(key, payload.get(key), baseline.get(key),
+                           failures)
+    return failures, notes
+
+
+def render(failures: list[str], notes: list[str]) -> str:
+    out = ["# --- bench regression gate ---"]
+    out += [f"# {n}" for n in notes]
+    if failures:
+        out.append(f"# FAIL: {len(failures)} regression(s) vs baseline:")
+        out += [f"#   ✗ {f}" for f in failures]
+        out.append("#   (intended change? regenerate with: PYTHONPATH=src "
+                   "python -m benchmarks.run --ci --json "
+                   "benchmarks/baseline_ci.json)")
+    else:
+        out.append("# PASS: no regressions vs baseline")
+    return "\n".join(out)

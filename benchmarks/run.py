@@ -31,7 +31,14 @@ def main() -> None:
     ap.add_argument("--profile", default=None, metavar="PATH",
                     help="also write a repro.cli-report-compatible profile "
                          "of one telemetry-on batched-engine pass to PATH")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare the fresh payload against a committed "
+                         "baseline JSON (benchmarks/baseline_ci.json) and "
+                         "exit non-zero on structural or tolerance-band "
+                         "regressions (requires --json)")
     args = ap.parse_args()
+    if args.baseline and not args.json:
+        ap.error("--baseline requires --json")
     if args.ci:
         # must precede the bench imports: common.py reads it at import
         os.environ["REPRO_BENCH_CI"] = "1"
@@ -58,10 +65,17 @@ def main() -> None:
         suite_s[key] = round(time.time() - t0, 1)
         print(f"# {key} done in {suite_s[key]:.1f}s", flush=True)
     breakdown = snap = wall = None
+    breakdown_pallas = None
     if args.json or args.profile:
         breakdown, snap, wall = common.profiled_world_run()
         print(f"# profiled one batched pass in {wall:.2f}s", flush=True)
     if args.json:
+        # smaller read set: the pallas pass runs the kernel bodies in
+        # interpret mode on CPU runners
+        bp, _, wp = common.profiled_world_run(
+            "pallas", n_reads=common.scaled(128, 24))
+        breakdown_pallas = bp
+        print(f"# profiled one pallas pass in {wp:.2f}s", flush=True)
         payload = {
             "ci_mode": args.ci,
             "python": sys.version.split()[0],
@@ -69,10 +83,17 @@ def main() -> None:
             "suites_s": suite_s,
             "rows": common.ROWS,
             "kernel_breakdown": breakdown,
+            "kernel_breakdown_pallas": breakdown_pallas,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}", flush=True)
+        if args.baseline:
+            from .regression import compare, render
+            failures, notes = compare(payload, json.load(open(args.baseline)))
+            print(render(failures, notes), flush=True)
+            if failures:
+                sys.exit(1)
     if args.profile:
         from repro import obs
         obs.write_profile(args.profile, snap, wall_s=wall,

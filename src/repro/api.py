@@ -47,6 +47,7 @@ from .core.contig import sam_header as _contig_header
 from .core.pipeline import (run_pe_baseline, run_pe_batched,
                             run_se_baseline, run_se_batched)
 from .core.sam import format_sam
+from .kernels.engine import run_pe_pallas, run_se_pallas
 from .options import AlignOptions, parse_read_group
 
 VERSION = "0.2.0"                 # keep in sync with pyproject.toml
@@ -99,6 +100,9 @@ def engines() -> list[str]:
 
 register_engine("baseline", run_se_baseline, run_pe_baseline)
 register_engine("batched", run_se_batched, run_pe_batched)
+# the batched pipeline with its hot kernels (BSW blocks + SMEM occ
+# lookups) routed through Pallas; byte-identical output (tested)
+register_engine("pallas", run_se_pallas, run_pe_pallas)
 
 
 # ---------------------------------------------------------------------

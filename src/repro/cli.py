@@ -86,7 +86,9 @@ def _options_from_args(args):
     from .options import AlignOptions, BWA_FLAGS
     flags = {f: getattr(args, "read_group" if f == "-R" else f.lstrip("-"))
              for f in BWA_FLAGS}
-    return AlignOptions.from_flags(flags, engine=args.engine)
+    interp = {"auto": None, "on": True, "off": False}[args.kernel_interpret]
+    return AlignOptions.from_flags(flags, engine=args.engine,
+                                   kernel_interpret=interp)
 
 
 def cmd_mem(args, argv) -> int:
@@ -187,8 +189,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="stream only shard i of n (default: this "
                          "process's repro.dist rank, else everything)")
     mm.add_argument("--engine", default="batched",
-                    help="registered alignment engine (default: batched; "
-                         "see repro.api.engines())")
+                    help="registered alignment engine: baseline, batched, "
+                         "pallas, or any repro.api.engines() entry "
+                         "(default: batched)")
+    mm.add_argument("--kernel-interpret", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="Pallas kernel mode for --engine pallas: auto "
+                         "resolves from the JAX backend (interpret on "
+                         "CPU, compiled on TPU/GPU) [auto]")
     mm.add_argument("--profile", default=None, metavar="JSON",
                     help="enable telemetry and write the kernel-breakdown "
                          "profile here (render with `repro.cli report`)")

@@ -361,7 +361,7 @@ def bsw_extend_batch(queries: list[np.ndarray], targets: list[np.ndarray],
 
 def bsw_extend_tasks(queries, targets, h0s, p: BSWParams,
                      ws=None, *, block: int = 256, sort: bool = True,
-                     pad: int = 32):
+                     pad: int = 32, batch_fn=None):
     """Batched driver for an ARBITRARY extension-task list (paper §5.3.1).
 
     The inter-task entry point shared by the pipeline's BSW stage and the
@@ -371,9 +371,14 @@ def bsw_extend_tasks(queries, targets, h0s, p: BSWParams,
     short-circuit to the no-op result (ksw_extend is never called with
     empty sequences in bwa).
 
+    ``batch_fn`` substitutes the per-block kernel (same signature as
+    ``bsw_extend_batch``, incl. the qmax/tmax padded-shape hints) — the
+    "pallas" engine passes ``kernels.bsw.bsw_extend_pallas`` here.
+
     Returns (results in INPUT order, stats) where stats carries the
     Table-8-style useful/computed cell accounting.
     """
+    fn = batch_fn if batch_fn is not None else bsw_extend_batch
     n = len(queries)
     results: list = [None] * n
     stats = dict(tasks=0, cells_useful=0, cells_total=0)
@@ -397,7 +402,7 @@ def bsw_extend_tasks(queries, targets, h0s, p: BSWParams,
         wsb = None if ws is None else [ws[i] for i in idxs]
         qmax = -(-max(len(q) for q in qs) // pad) * pad
         tmax = -(-max(len(t) for t in ts) // pad) * pad
-        res = bsw_extend_batch(qs, ts, h0b, p, ws=wsb, qmax=qmax, tmax=tmax)
+        res = fn(qs, ts, h0b, p, ws=wsb, qmax=qmax, tmax=tmax)
         for i, r in zip(idxs, res):
             results[i] = r
         obs.count("bsw_dispatches")

@@ -38,7 +38,7 @@ from . import sal as sal_mod
 from .bsw import BSWParams, ExtResult, bsw_extend, bsw_extend_tasks
 from .chain import Chain, ChainOptions, chain_seeds, filter_chains
 from .contig import block_bounds, contig_edges
-from .fmindex import FMIndex, occ_opt_np, occ_opt_v, occ_base_v
+from .fmindex import FMIndex, occ_opt_np, occ_opt_v
 from .sam import global_align_cigar, format_sam
 from .smem import MemOptions
 
@@ -219,10 +219,12 @@ class BatchedBSWExecutor:
     extension task, runs them as length-sorted inter-task batches, then
     serves the decision replay from the result table."""
 
-    def __init__(self, p: BSWParams, block: int = 256, sort: bool = True):
+    def __init__(self, p: BSWParams, block: int = 256, sort: bool = True,
+                 batch_fn=None):
         self.p = p
         self.block = block
         self.sort = sort
+        self.batch_fn = batch_fn      # None = jnp lockstep; see bsw_batch_fn
         self.table: dict = {}
         self.stats = obs.Snapshot(tasks=0, cells_useful=0, cells_total=0)
 
@@ -235,7 +237,8 @@ class BatchedBSWExecutor:
                                    [tasks[k][1] for k in keys],
                                    [tasks[k][2] for k in keys], self.p,
                                    ws=[tasks[k][3] for k in keys],
-                                   block=self.block, sort=self.sort)
+                                   block=self.block, sort=self.sort,
+                                   batch_fn=self.batch_fn)
         for k, r in zip(keys, res):
             self.table[k] = r
         self.stats.merge_in(st)
@@ -424,6 +427,44 @@ class PipelineOptions:
     bsw_block: int = 256
     bsw_sort: bool = True
     min_score: int = 30             # emission threshold (bwa -T)
+    # Kernel backends for the batched driver's hot stages.  The defaults
+    # reproduce the historic behavior (pure numpy/jnp lockstep); the
+    # "pallas" engine flips both to route through the Pallas kernels.
+    bsw_backend: str = "jnp"        # "jnp" | "pallas"
+    occ_backend: str = "numpy"      # "numpy" | "jnp" | "pallas"
+    kernel_interpret: bool | None = None   # None: resolve from backend
+
+
+def bsw_batch_fn(opt: PipelineOptions):
+    """Per-block BSW kernel for ``opt.bsw_backend`` (None = jnp default).
+
+    Shared by the SE executor and the PE mate-rescue fan-out so one
+    option surface controls every BSW dispatch in the pipeline.
+    """
+    if opt.bsw_backend == "jnp":
+        return None
+    if opt.bsw_backend == "pallas":
+        import functools
+        from ..kernels.bsw import bsw_extend_pallas   # deferred: optional layer
+        return functools.partial(bsw_extend_pallas,
+                                 interpret=opt.kernel_interpret)
+    raise ValueError(f"unknown bsw_backend {opt.bsw_backend!r}")
+
+
+def occ_fn_for(idx: FMIndex, opt: PipelineOptions):
+    """SMEM occ callable for ``opt.occ_backend``.
+
+    "pallas" attaches (and caches on the index) the swept occ-layout
+    configuration — see ``kernels.engine.attach_occ_config``.
+    """
+    if opt.occ_backend == "numpy":
+        return occ_opt_np
+    if opt.occ_backend == "jnp":
+        return occ_opt_v
+    if opt.occ_backend == "pallas":
+        from ..kernels.engine import attach_occ_config   # deferred: optional
+        return attach_occ_config(idx, interpret=opt.kernel_interpret).occ_fn
+    raise ValueError(f"unknown occ_backend {opt.occ_backend!r}")
 
 
 def run_se_baseline(idx: FMIndex, reads: np.ndarray,
@@ -488,10 +529,11 @@ def run_se_batched(idx: FMIndex, reads: np.ndarray,
     edges = contig_edges(idx)
     R, L = reads.shape
     lens = np.full(R, L, np.int64)
-    # Stage 1: batched SMEM (optimized eta=32 occ; numpy backend on CPU)
+    # Stage 1: batched SMEM (optimized eta=32 occ; numpy backend on CPU,
+    # Pallas kernel when opt.occ_backend == "pallas")
     with obs.span("smem", reads=R):
         mems = smem_mod.collect_smems_batch(idx, reads, lens, opt.mem,
-                                            occ_fn=occ_opt_np)
+                                            occ_fn=occ_fn_for(idx, opt))
     # Stage 2: batched SAL (uncompressed SA, one gather for everything)
     with obs.span("sal"):
         seeds_per_read, n_lookups = sal_mod.seeds_from_intervals(
@@ -508,7 +550,8 @@ def run_se_batched(idx: FMIndex, reads: np.ndarray,
             for ci, c in enumerate(chains):
                 jobs.append(((r, ci), c, reads[r], idx))
     # Stage 4: batched inter-task BSW with length sorting
-    execu = BatchedBSWExecutor(opt.bsw, block=opt.bsw_block, sort=opt.bsw_sort)
+    execu = BatchedBSWExecutor(opt.bsw, block=opt.bsw_block, sort=opt.bsw_sort,
+                               batch_fn=bsw_batch_fn(opt))
     with obs.span("bsw", jobs=len(jobs)):
         execu.plan_and_run(jobs)
     # Stage 5: decision replay + SAM-FORM

@@ -54,7 +54,8 @@ def global_align_cigar(q: np.ndarray, t: np.ndarray, w: int,
     state = "H"
     while i > 0 or j > 0:
         if state == "H":
-            if i > 0 and j > 0 and H[i, j] == H[i - 1, j - 1] + mat[int(q[i - 1]), int(t[j - 1])]:
+            if i > 0 and j > 0 and H[i, j] == (
+                    H[i - 1, j - 1] + mat[int(q[i - 1]), int(t[j - 1])]):
                 ops.append("M")
                 i -= 1
                 j -= 1

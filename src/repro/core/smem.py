@@ -28,9 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
-from .fmindex import (FMIndex, FMArrays, backward_ext_np, backward_ext_v,
+from .fmindex import (FMIndex, backward_ext_np, backward_ext_v,
                       forward_ext_np, forward_ext_v, occ_base_np,
-                      occ_opt_np, occ_opt_v, I32)
+                      occ_opt_np, I32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,23 +239,60 @@ _bwd_round_j = jax.jit(_bwd_round, static_argnames=("occ_fn",))
 _NUMPY_OCC = (occ_opt_np, occ_base_np)
 
 
+def _bucket_tasks(T: int) -> int:
+    """Pad the live-task axis to a power of two (floor 32).
+
+    The jitted rounds retrace per distinct (T, P) shape; as lockstep tasks
+    die off, T shrinks by arbitrary amounts each round, which with a
+    Pallas occ_fn would mean a kernel recompile per round.  Bucketing T
+    bounds the distinct shapes to O(log T).  Pad lanes use k=l=s=0, c=4 —
+    the same values dead-but-present lanes already carry through the
+    vectorized rounds, so results are unaffected.
+    """
+    return max(32, 1 << (T - 1).bit_length())
+
+
 def _ext_round(idx: FMIndex, which: str, k, l, s, c, occ_fn):
     """One vectorized extension round, numpy or jax backend.
 
     The numpy backend (default) runs the identical integer math without
     per-round device dispatch — the CPU-pipeline fast path.  The jax
-    backend is what a TPU host loop would use (and what the fmocc Pallas
-    kernel implements)."""
+    backend is what a TPU host loop would use; occ_fns carrying
+    ``is_pallas`` (kernels.fmocc.make_occ_fn) route every occ lookup of
+    the round through the Pallas kernel and are counted/timed as kernel
+    dispatches."""
     obs.count("smem_rounds")
     if occ_fn in _NUMPY_OCC:
         fn = forward_ext_np if which == "fwd" else backward_ext_np
         return fn(idx, k, l, s, c, occ_np=occ_fn)
     obs.count("smem_occ_dispatches")
     jf = _fwd_round_j if which == "fwd" else _bwd_round_j
-    out = jf(idx.device(), jnp.asarray(k, I32.dtype),
-             jnp.asarray(l, I32.dtype), jnp.asarray(s, I32.dtype),
-             jnp.asarray(np.clip(c, 0, 4), I32.dtype), occ_fn=occ_fn)
-    return tuple(np.asarray(v, np.int64) for v in out)
+    k = np.asarray(k); l = np.asarray(l); s = np.asarray(s)
+    c = np.clip(c, 0, 4)
+    is_pallas = getattr(occ_fn, "is_pallas", False)
+    T = k.shape[0]
+    Tp = _bucket_tasks(T) if is_pallas else T
+    if Tp != T:
+        padw = ((0, Tp - T),) + ((0, 0),) * (k.ndim - 1)
+        k = np.pad(k, padw); l = np.pad(l, padw); s = np.pad(s, padw)
+        c = np.pad(np.asarray(c), ((0, Tp - T),) + ((0, 0),) * (c.ndim - 1),
+                   constant_values=4)
+
+    def dispatch():
+        return jf(idx.device(), jnp.asarray(k, I32.dtype),
+                  jnp.asarray(l, I32.dtype), jnp.asarray(s, I32.dtype),
+                  jnp.asarray(c, I32.dtype), occ_fn=occ_fn)
+
+    if is_pallas and obs.enabled():
+        with obs.span("kernel.fmocc", cat="kernel", tasks=T):
+            obs.count("kernel_fmocc_dispatches")
+            out = dispatch()
+            jax.block_until_ready(out)
+    else:
+        if is_pallas:
+            obs.count("kernel_fmocc_dispatches")
+        out = dispatch()
+    return tuple(np.asarray(v, np.int64)[:T] for v in out)
 
 
 def smem1_batch(idx: FMIndex, reads: np.ndarray, lens: np.ndarray,
@@ -336,7 +373,8 @@ def smem1_batch(idx: FMIndex, reads: np.ndarray, lens: np.ndarray,
     ret = np.where(valid0, np.where(curr_n > 0, curr_e[:, 0], x + 1), x + 1)
 
     # ---- backward phase ----
-    prev_k, prev_l, prev_s, prev_e, prev_n = curr_k, curr_l, curr_s, curr_e, curr_n.copy()
+    prev_k, prev_l, prev_s, prev_e = curr_k, curr_l, curr_s, curr_e
+    prev_n = curr_n.copy()
     M = P
     mem_k = np.zeros((T, M), np.int64); mem_l = np.zeros((T, M), np.int64)
     mem_s = np.zeros((T, M), np.int64); mem_qb = np.zeros((T, M), np.int64)
@@ -344,7 +382,6 @@ def smem1_batch(idx: FMIndex, reads: np.ndarray, lens: np.ndarray,
     active = valid0 & (prev_n > 0)
     i_t = x - 1                               # per-task backward position
 
-    ent = np.arange(P)
     while active.any():
         c = np.full(T, -1, np.int64)
         pos_ok = active & (i_t >= 0)

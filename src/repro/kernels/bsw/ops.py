@@ -7,24 +7,38 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core.bsw import BSWParams, ExtResult, adjusted_band
+from ..config import resolve_interpret
 from .kernel import bsw_pallas_call, LANES
 
 
 def bsw_extend_pallas(queries, targets, h0s, p: BSWParams, ws=None,
-                      interpret: bool = True):
+                      qmax: int | None = None, tmax: int | None = None,
+                      interpret: bool | None = None):
     """Drop-in equivalent of ``core.bsw.bsw_extend_batch`` that runs the
-    Pallas kernel (interpret=True executes the kernel body on CPU)."""
+    Pallas kernel.
+
+    Accepts the same ``qmax``/``tmax`` padded-shape hints as the jnp
+    batch so ``bsw_extend_tasks`` can use it as a ``batch_fn`` — padding
+    to the caller's rounded shape keeps the number of distinct
+    (qmax, tmax) jit signatures (and hence kernel recompiles) bounded.
+    ``interpret=None`` resolves from the active backend: interpret on
+    CPU, compiled on TPU/GPU (kernels.config).
+    """
+    itp = resolve_interpret(interpret)
     with obs.span("kernel.bsw_pallas", cat="kernel", lanes=len(queries)):
         obs.count("kernel_bsw_dispatches")
-        return _bsw_extend_pallas(queries, targets, h0s, p, ws, interpret)
+        return _bsw_extend_pallas(queries, targets, h0s, p, ws,
+                                  qmax, tmax, itp)
 
 
-def _bsw_extend_pallas(queries, targets, h0s, p, ws, interpret):
+def _bsw_extend_pallas(queries, targets, h0s, p, ws, qmax, tmax, interpret):
     W = len(queries)
     qlens = np.array([len(q) for q in queries], np.int32)
     tlens = np.array([len(t) for t in targets], np.int32)
-    qmax = max(int(qlens.max()), 1)
-    tmax = max(int(tlens.max()), 1)
+    if qmax is None:
+        qmax = max(int(qlens.max()), 1)
+    if tmax is None:
+        tmax = max(int(tlens.max()), 1)
     Wp = -(-W // LANES) * LANES
     qs = np.full((Wp, qmax), 4, np.int32)
     ts = np.full((Wp, tmax), 4, np.int32)

@@ -1,0 +1,54 @@
+"""Kernel execution config: interpret-mode resolution for Pallas calls.
+
+Pallas kernels compile natively on TPU/GPU; on CPU they only run in
+``interpret=True`` mode (the kernel body emulated through jax.lax).  The
+ops wrappers historically hardcoded ``interpret=True``, which silently
+pinned a compiled backend to the emulator.  ``resolve_interpret`` fixes
+the default: resolved ONCE from the active JAX backend, overridable per
+call (the explicit engine option), with a warning when a compiled
+backend is forced back into interpret mode.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+
+#: backends with a compiled Pallas lowering (everything else interprets)
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_default: bool | None = None  # resolved once per process
+_warned = False  # fallback warning fires once per process
+
+
+def default_interpret() -> bool:
+    """True iff the active JAX backend needs interpret-mode Pallas (CPU)."""
+    global _default
+    if _default is None:
+        _default = jax.default_backend() not in COMPILED_BACKENDS
+    return _default
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a per-call ``interpret`` option to a concrete bool.
+
+    ``None`` means "whatever the backend needs" (interpret on CPU,
+    compiled on TPU/GPU).  An explicit ``True`` on a compiled backend is
+    honored but warned about once — it usually means a debug knob leaked
+    into a production run.
+    """
+    if interpret is None:
+        return default_interpret()
+    if interpret and not default_interpret():
+        global _warned
+        if not _warned:
+            _warned = True
+            warnings.warn(
+                f"Pallas kernels forced to interpret mode on the compiled "
+                f"{jax.default_backend()!r} backend — expect a large "
+                f"slowdown (pass interpret=None to use the native path)",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+    return interpret

@@ -1,0 +1,133 @@
+"""The "pallas" engine: the batched pipeline with Pallas hot kernels.
+
+Registered by ``repro.api`` alongside "baseline" and "batched", and
+satisfying the same contract (``se(idx, reads, PipelineOptions)`` /
+``pe(idx, r1, r2, PipelineOptions, PEOptions, names)``).  It IS the
+batched driver — same stages, same decision replay, byte-identical
+output — with the two hot kernels routed through Pallas:
+
+* BSW: every length-sorted extension block (seed extension, band-doubled
+  retries, PE mate rescue) dispatches ``kernels.bsw.bsw_extend_pallas``
+  instead of the jnp lockstep batch.
+
+* SMEM occ: every backward/forward-extension round's occ lookups run the
+  ``kernels.fmocc`` compare+count kernel, in the occ-block layout picked
+  by ``attach_occ_config``'s sweep.
+
+The occ-layout sweep is the paper's eta experiment (§4.4 / Table 4) run
+live: at index-attach time each candidate (layout, queries-per-grid-cell)
+configuration is timed on the ACTIVE backend with a synthetic query
+batch, and the fastest becomes the index's occ kernel.  All candidates
+return identical occ values, so the choice affects throughput only —
+byte-identity with "baseline" holds whatever wins.  Set
+``REPRO_PALLAS_SWEEP=0`` to skip timing and take the default (eta=32,
+the paper's winner on cache-line-sized loads).
+
+``interpret`` resolves from the backend (kernels.config): interpreted on
+CPU so the engine runs everywhere, compiled on TPU/GPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import obs
+from ..core.pipeline import PipelineOptions, run_pe_batched, run_se_batched
+from .config import resolve_interpret
+from .fmocc.ops import make_occ_fn
+
+#: (layout, qb) candidates the attach-time sweep times on the backend
+SWEEP_CANDIDATES = (("eta32", 256), ("eta32", 512), ("eta128", 256))
+DEFAULT_CANDIDATE = ("eta32", 256)
+SWEEP_QUERIES = 2048     # synthetic occ queries per timing rep
+SWEEP_REPS = 2           # timed reps per candidate (after warmup)
+
+
+@dataclasses.dataclass(frozen=True)
+class OccConfig:
+    """Swept occ-kernel configuration attached to one index + backend."""
+    layout: str
+    qb: int
+    interpret: bool
+    timings: tuple = ()      # ((layout, qb, best_seconds), ...) or () if
+                             # the sweep was skipped
+
+    @property
+    def occ_fn(self):
+        """The stable occ callable for this configuration (cached in
+        kernels.fmocc — safe as a static jit argument)."""
+        return make_occ_fn(self.layout, self.qb, self.interpret)
+
+
+def sweep_occ_configs(idx, interpret: bool | None = None) -> OccConfig:
+    """Time every candidate on the active backend; return the fastest.
+
+    Synthetic uniform queries are representative here because the kernel
+    is data-oblivious: one gathered bucket row + compare+count per query,
+    whatever the values.  Deterministically seeded so repeated sweeps see
+    identical inputs.
+    """
+    itp = resolve_interpret(interpret)
+    if os.environ.get("REPRO_PALLAS_SWEEP", "1") == "0":
+        return OccConfig(*DEFAULT_CANDIDATE, itp)
+    fm = idx.device()
+    n = len(idx.bwt)
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.integers(0, 4, SWEEP_QUERIES, dtype=np.int32))
+    i = jnp.asarray(rng.integers(-1, n - 1, SWEEP_QUERIES,
+                                 dtype=np.int32, endpoint=True))
+    timings = []
+    for layout, qb in SWEEP_CANDIDATES:
+        fn = make_occ_fn(layout, qb, itp)
+        jax.block_until_ready(fn(fm, c, i))          # warmup (compile)
+        best = float("inf")
+        for _ in range(SWEEP_REPS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(fm, c, i))
+            best = min(best, time.perf_counter() - t0)
+        timings.append((layout, qb, best))
+    layout, qb, _ = min(timings, key=lambda t: t[2])
+    return OccConfig(layout, qb, itp, tuple(timings))
+
+
+def attach_occ_config(idx, interpret: bool | None = None) -> OccConfig:
+    """Sweep once per (index, interpret-mode) and cache on the index.
+
+    Subsequent pipeline runs (and ``core.pipeline.occ_fn_for``) reuse the
+    cached config, so the sweep cost is paid at attach time only.
+    """
+    itp = resolve_interpret(interpret)
+    cfg = getattr(idx, "_pallas_occ_cfg", None)
+    if cfg is not None and cfg.interpret == itp:
+        return cfg
+    with obs.span("kernel.occ_sweep", cat="kernel"):
+        cfg = sweep_occ_configs(idx, itp)
+    idx._pallas_occ_cfg = cfg
+    return cfg
+
+
+def _pallas_opt(opt: PipelineOptions) -> PipelineOptions:
+    return dataclasses.replace(opt, bsw_backend="pallas",
+                               occ_backend="pallas")
+
+
+def run_se_pallas(idx, reads, opt: PipelineOptions = PipelineOptions()):
+    """SE driver of the "pallas" engine (batched pipeline + Pallas
+    kernels).  Returns (list per read of Alignment, stats)."""
+    attach_occ_config(idx, interpret=opt.kernel_interpret)
+    return run_se_batched(idx, reads, _pallas_opt(opt))
+
+
+def run_pe_pallas(idx, reads1, reads2,
+                  opt: PipelineOptions = PipelineOptions(),
+                  pe_opt=None, names=None):
+    """PE driver of the "pallas" engine.  Returns (sam_lines, stats)."""
+    attach_occ_config(idx, interpret=opt.kernel_interpret)
+    return run_pe_batched(idx, reads1, reads2, _pallas_opt(opt), pe_opt,
+                          names=names)

@@ -1,1 +1,1 @@
-from .ops import occ_pallas, backward_ext_pallas  # noqa: F401
+from .ops import occ_pallas, backward_ext_pallas, make_occ_fn  # noqa: F401

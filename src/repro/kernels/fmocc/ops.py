@@ -7,6 +7,17 @@ trace time, so spans/counters placed inside it would record nothing on
 cached calls.  With telemetry off the wrappers add one thread-local read;
 with it on they count device dispatches and time the call to completion
 (``block_until_ready``, so the span measures compute, not dispatch).
+
+``interpret`` resolves from the active JAX backend when left ``None``
+(interpret on CPU, compiled on TPU/GPU — see ``kernels.config``).
+
+``make_occ_fn`` builds the pipeline-facing occ callable for one
+(layout, qb, interpret) configuration.  The SMEM search passes occ
+functions as STATIC jit arguments (``core.smem._fwd_round_j``), so the
+factory is cached: one stable function object per configuration, no
+retraces across calls or indexes.  The engine's occ-layout sweep
+(``kernels.engine``) times these configurations and picks one per
+index + backend.
 """
 
 from __future__ import annotations
@@ -18,37 +29,84 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core.fmindex import FMArrays, I32
-from .kernel import occ_count_pallas_call, QB
+from ..config import resolve_interpret
+from .kernel import (occ_count_pallas_call, occ_count_packed_pallas_call,
+                     QB)
+
+#: occ-bucket layouts the kernels implement: eta=32 (paper-optimized,
+#: one byte/base) and eta=128 (original bwa-mem, 2-bit packed)
+LAYOUTS = ("eta32", "eta128")
 
 
 def _occ_impl(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
+              layout: str = "eta32", qb: int = QB,
               interpret: bool = True) -> jnp.ndarray:
     """Occ(c, i) over flat query vectors via the Pallas compare+count kernel.
 
     XLA performs the bucket gather (one vectorized load per lockstep round
     — the batching-as-prefetch adaptation); Pallas does the byte-compare +
-    popcount over the gathered 32-byte rows.
+    popcount over the gathered 32-byte rows.  ``layout`` picks the bucket
+    encoding; for eta=128 the sentinel correction (primary row packed as
+    code 0, see ``fmindex.occ_base_v``) is folded into the additive base
+    so the kernel body stays a pure compare+count.
     """
     shape = c.shape
     cf = c.reshape(-1).astype(I32)
     i_f = i.reshape(-1).astype(I32)
     p = i_f + 1
-    b = p >> 5
-    r = p & 31
-    base = fm.occ32_counts[b, cf]
-    rows = fm.occ32_bytes[b]
+    if layout == "eta32":
+        b = p >> 5
+        r = p & 31
+        base = fm.occ32_counts[b, cf]
+        rows = fm.occ32_bytes[b]
+        call = occ_count_pallas_call
+    elif layout == "eta128":
+        b = p >> 7
+        r = p & 127
+        corr = ((cf == 0) & (fm.primary >= (b << 7)) &
+                (fm.primary < p)).astype(I32)
+        base = fm.occ128_counts[b, cf] - corr
+        rows = fm.occ128_packed[b]
+        call = occ_count_packed_pallas_call
+    else:
+        raise ValueError(f"unknown occ layout {layout!r} "
+                         f"(known: {', '.join(LAYOUTS)})")
     T = cf.shape[0]
-    Tp = -(-T // QB) * QB
+    Tp = -(-T // qb) * qb
     pad = Tp - T
     rows = jnp.pad(rows, ((0, pad), (0, 0)))
-    out = occ_count_pallas_call(
-        rows, jnp.pad(cf, (0, pad)), jnp.pad(r, (0, pad)),
-        jnp.pad(base, (0, pad)), interpret=interpret)
+    out = call(rows, jnp.pad(cf, (0, pad)), jnp.pad(r, (0, pad)),
+               jnp.pad(base, (0, pad)), qb=qb, interpret=interpret)
     return out[:T].reshape(shape)
 
 
-_occ_pallas_jit = functools.partial(
-    jax.jit(_occ_impl, static_argnames=("interpret",)))
+_occ_pallas_jit = jax.jit(_occ_impl,
+                          static_argnames=("layout", "qb", "interpret"))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_occ_fn(layout: str, qb: int, interpret: bool):
+    def occ(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+        return _occ_impl(fm, c, i, layout=layout, qb=qb, interpret=interpret)
+    occ.__name__ = occ.__qualname__ = f"occ_pallas_{layout}_qb{qb}"
+    occ.is_pallas = True
+    occ.layout = layout
+    occ.qb = qb
+    occ.interpret = interpret
+    return occ
+
+
+def make_occ_fn(layout: str = "eta32", qb: int = QB,
+                interpret: bool | None = None):
+    """One STABLE occ callable per (layout, qb, interpret) configuration.
+
+    The returned function has the ``occ_fn(fm, c, i)`` signature of
+    ``fmindex.occ_opt_v`` (traceable inside jit) and carries
+    ``is_pallas`` / ``layout`` / ``qb`` / ``interpret`` attributes so the
+    SMEM dispatcher can recognise and instrument it.  Cached so repeated
+    calls return the SAME object — safe as a static jit argument.
+    """
+    return _make_occ_fn(layout, int(qb), resolve_interpret(interpret))
 
 
 def _backward_ext_impl(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
@@ -80,23 +138,27 @@ _backward_ext_pallas_jit = jax.jit(_backward_ext_impl,
 
 
 def occ_pallas(fm: FMArrays, c: jnp.ndarray, i: jnp.ndarray, *,
-               interpret: bool = True) -> jnp.ndarray:
+               layout: str = "eta32", qb: int = QB,
+               interpret: bool | None = None) -> jnp.ndarray:
     """Public Occ(c, i) entry point (see module docstring)."""
+    itp = resolve_interpret(interpret)
     if not obs.enabled():
-        return _occ_pallas_jit(fm, c, i, interpret=interpret)
+        return _occ_pallas_jit(fm, c, i, layout=layout, qb=qb, interpret=itp)
     with obs.span("kernel.fmocc", cat="kernel"):
         obs.count("kernel_fmocc_dispatches")
-        out = _occ_pallas_jit(fm, c, i, interpret=interpret)
+        out = _occ_pallas_jit(fm, c, i, layout=layout, qb=qb, interpret=itp)
         jax.block_until_ready(out)
     return out
 
 
-def backward_ext_pallas(fm: FMArrays, k, l, s, c, *, interpret: bool = True):
+def backward_ext_pallas(fm: FMArrays, k, l, s, c, *,
+                        interpret: bool | None = None):
     """Public backward-extension entry point (see module docstring)."""
+    itp = resolve_interpret(interpret)
     if not obs.enabled():
-        return _backward_ext_pallas_jit(fm, k, l, s, c, interpret=interpret)
+        return _backward_ext_pallas_jit(fm, k, l, s, c, interpret=itp)
     with obs.span("kernel.fmocc_bwd", cat="kernel"):
         obs.count("kernel_fmocc_dispatches")
-        out = _backward_ext_pallas_jit(fm, k, l, s, c, interpret=interpret)
+        out = _backward_ext_pallas_jit(fm, k, l, s, c, interpret=itp)
         jax.block_until_ready(out)
     return out

@@ -81,7 +81,6 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     counts: dict = {}
     by_kind: dict = {}
     link = 0.0
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:

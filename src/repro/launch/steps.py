@@ -3,10 +3,7 @@ ArchConfig, ready for jit with explicit in/out shardings."""
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..models import lm

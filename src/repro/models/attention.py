@@ -11,8 +11,6 @@ hillclimb that skips them.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -9,7 +9,6 @@ dry-run compiles.  KV caches / SSM states are likewise stacked.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

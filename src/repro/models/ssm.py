@@ -47,7 +47,6 @@ def init_ssm(key, cfg, dtype):
 def _split_proj(z_all, cfg):
     d_in = cfg.ssm_expand * cfg.d_model
     G, N = cfg.ssm_groups, cfg.ssm_state
-    H = d_in // cfg.ssm_headdim
     z, xb, B, C, dt = jnp.split(
         z_all, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N],
         axis=-1)

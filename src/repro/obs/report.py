@@ -109,6 +109,16 @@ def breakdown(snap: dict, wall_s: float | None = None) -> dict:
         v = _num(snap.get(key))
         if v is not None:
             out["counters"][key] = int(v) if float(v).is_integer() else v
+    # kernel-level spans (cat="kernel": Pallas BSW blocks, fmocc rounds,
+    # the occ-layout sweep) — nested inside the stage rows above, so
+    # reported separately rather than summed into ``measured_s``
+    kernels = {}
+    for key, v in snap.items():
+        if (isinstance(key, str) and key.startswith("time_kernel.")
+                and key.endswith("_s") and _num(v) is not None):
+            kernels[key[len("time_"):-len("_s")]] = round(float(v), 6)
+    if kernels:
+        out["kernels"] = kernels
     for prefix, label in (("", "bsw"), ("rescue_", "pe_rescue")):
         useful = _num(snap.get(f"{prefix}cells_useful"))
         total = _num(snap.get(f"{prefix}cells_total"))
@@ -166,6 +176,11 @@ def render(snap: dict, wall_s: float | None = None,
             lines.append(f"    {label:<10} {eff['cells_useful']:>12,} / "
                          f"{eff['cells_total']:>12,}  = "
                          f"{100.0 * eff['ratio']:.1f}%")
+    if b.get("kernels"):
+        lines.append("")
+        lines.append("  kernel time (inside the stages above):")
+        for key in sorted(b["kernels"]):
+            lines.append(f"    {key:<22} {b['kernels'][key]:>10.4f}s")
     if b["counters"]:
         lines.append("")
         lines.append("  operation counters (paper Table 5 style):")

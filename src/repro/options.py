@@ -33,6 +33,7 @@ from .pe.rescue import PEOptions
 
 ENGINE_BASELINE = "baseline"
 ENGINE_BATCHED = "batched"
+ENGINE_PALLAS = "pallas"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +81,11 @@ class AlignOptions:
     engine: str = ENGINE_BATCHED    # registry name; see repro.api
     bsw_block: int = 256
     bsw_sort: bool = True
+    # Pallas kernel execution mode (engine="pallas" only): None resolves
+    # from the active JAX backend — interpret on CPU, compiled on
+    # TPU/GPU; an explicit bool forces it (kernels.config warns when a
+    # compiled backend is forced back into interpret mode).
+    kernel_interpret: bool | None = None
 
     # -- projections onto the per-stage dataclasses --
 
@@ -113,7 +119,8 @@ class AlignOptions:
                                bsw=self.bsw_params(),
                                bsw_block=self.bsw_block,
                                bsw_sort=self.bsw_sort,
-                               min_score=self.min_score)
+                               min_score=self.min_score,
+                               kernel_interpret=self.kernel_interpret)
 
     def pe_options(self) -> PEOptions:
         return PEOptions(max_ins=self.max_ins,

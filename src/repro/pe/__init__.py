@@ -43,9 +43,11 @@ def pair_pipeline(idx, reads1, reads2, res1, res2, opt, peopt=None, *,
     with obs.span("pe_rescue"):
         tasks = plan_rescues((res1, res2), (reads1, reads2), pes, idx, peopt)
         if batched:
+            from ..core.pipeline import bsw_batch_fn
             outs, rstats = run_rescues_batched(tasks, idx, p,
                                                block=opt.bsw_block,
-                                               sort=opt.bsw_sort)
+                                               sort=opt.bsw_sort,
+                                               batch_fn=bsw_batch_fn(opt))
         else:
             outs, rstats = run_rescues_scalar(tasks, idx, p)
         n_rescued = merge_rescues((res1, res2), tasks, outs, idx, p,

@@ -191,12 +191,12 @@ def run_rescues_scalar(tasks: list[RescueTask], idx, p: BSWParams):
 
 
 def run_rescues_batched(tasks: list[RescueTask], idx, p: BSWParams, *,
-                        block: int = 256, sort: bool = True):
+                        block: int = 256, sort: bool = True, batch_fn=None):
     """Optimized: all rescue extensions across the batch pooled,
     length-sorted and dispatched through the batched BSW executor, then
     decisions replayed per task — same structure as the main pipeline's
-    Stage 4."""
-    execu = BatchedBSWExecutor(p, block=block, sort=sort)
+    Stage 4 (``batch_fn`` selects the same per-block kernel)."""
+    execu = BatchedBSWExecutor(p, block=block, sort=sort, batch_fn=batch_fn)
     execu.plan_and_run([(ti, t.chain, t.query, idx)
                         for ti, t in enumerate(tasks)])
     outs = [chain2aln(t.chain, t.query, idx, p, execu.executor(ti))

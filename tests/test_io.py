@@ -21,9 +21,8 @@ from repro.core import build_contig_index, sam_header
 from repro.core.fmindex import PERSIST_ARRAYS, build_index
 from repro.core.pipeline import (align_pairs_optimized,
                                  align_reads_optimized, to_sam)
-from repro.data import (decode, make_reference, simulate_pairs_multi,
-                        simulate_reads_multi, simulate_reference,
-                        write_fasta, write_fastq, write_fastq_pair)
+from repro.data import (make_reference, simulate_pairs_multi,
+                        simulate_reference, write_fasta, write_fastq_pair)
 from repro.dist.api import read_shard
 from repro.io import (FastqRecord, encode_read, have_index, load_index,
                       load_reference, read_fasta, read_fastq,

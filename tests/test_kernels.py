@@ -28,6 +28,21 @@ def test_fmocc_shapes(idx, n):
     assert (np.asarray(got) == np.asarray(want)).all()
 
 
+@pytest.mark.parametrize("layout,qb", [
+    ("eta32", 64), ("eta32", 512), ("eta128", 64), ("eta128", 256),
+])
+def test_fmocc_layout_qb_grid(idx, layout, qb):
+    """Every (occ layout, queries-per-grid-cell) sweep candidate returns
+    the oracle's values — the engine's layout choice is throughput-only."""
+    rng = np.random.default_rng(qb)
+    n = 700
+    cc = jnp.asarray(rng.integers(0, 4, size=n).astype(np.int32))
+    ii = jnp.asarray(rng.integers(-1, idx.N, size=n).astype(np.int32))
+    got = occ_pallas(idx.device(), cc, ii, layout=layout, qb=qb)
+    want = fmx.occ_opt_v(idx.device(), cc, ii)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
 def test_fmocc_2d_batch(idx):
     rng = np.random.default_rng(0)
     cc = jnp.asarray(rng.integers(0, 4, size=(13, 4)).astype(np.int32))

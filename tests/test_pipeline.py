@@ -1,7 +1,6 @@
 """The paper's hard requirement: the optimized pipeline's output is
 IDENTICAL to the baseline's (like-for-like replacement, §1)."""
 
-import numpy as np
 import pytest
 
 from repro.core import fmindex as fmx
