@@ -17,8 +17,12 @@ compared — the gate checks what IS stable across machines:
   did work in the baseline still does work (a kernel silently falling
   out of the pipeline shows up as its stage going to zero).
 
-``compare`` returns (failures, notes); ``render`` formats them.  The
-remedy for an INTENDED change is regenerating the baseline:
+``compare`` returns (failures, notes); ``render`` formats them.  Every
+baseline datum the gate does NOT compare — timing rows, machine-varying
+payload fields (python/platform/suite walls), breakdown stage/kernel
+timing values — is surfaced as an explicit note plus a summary count,
+so a passing gate also states exactly what it skipped.  The remedy for
+an INTENDED change is regenerating the baseline:
 
     PYTHONPATH=src python -m benchmarks.run --ci --json benchmarks/baseline_ci.json
 """
@@ -28,6 +32,11 @@ from __future__ import annotations
 TIMING_MARKERS = ("_s", "_per_s", "us_per", "ns_per", "ms_per")
 SPEEDUP_BAND = 3.0     # speedup rows: within [base/3, base*3]
 FRAC_TOL = 0.05        # utilization-fraction rows: |fresh - base| <= 0.05
+
+#: top-level payload fields that legitimately differ between machines/
+#: runs and are therefore excluded from comparison — each exclusion is
+#: logged so the gate's output states what it did NOT check
+MACHINE_VARYING_FIELDS = ("python", "platform", "suites_s")
 
 
 def _is_timing(name: str) -> bool:
@@ -66,7 +75,7 @@ def _compare_row(name: str, fresh, base, failures, notes):
         failures.append(f"row {name}: {fv:g} != baseline {bv:g}")
 
 
-def _compare_breakdown(key: str, fresh, base, failures):
+def _compare_breakdown(key: str, fresh, base, failures, notes):
     if base is None:
         return
     if fresh is None:
@@ -79,16 +88,25 @@ def _compare_breakdown(key: str, fresh, base, failures):
     for name in sorted(set(fstages) - set(bstages)):
         failures.append(f"{key}: new stage {name!r} "
                         f"(regenerate the baseline)")
+    skipped_stage_timings = 0
     for name, bs in bstages.items():
         fs = fstages.get(name)
         if fs and bs.get("time_s", 0) > 0 and not fs.get("time_s", 0) > 0:
             failures.append(f"{key}: stage {name!r} did work in the "
                             f"baseline but measured 0s now")
+        elif fs is not None:
+            skipped_stage_timings += 1
+    if skipped_stage_timings:
+        notes.append(f"  ~ {key}: {skipped_stage_timings} stage timing(s) "
+                     f"checked for activity only, values not compared")
     bkern = base.get("kernels") or {}
     fkern = fresh.get("kernels") or {}
     for name in sorted(set(bkern) - set(fkern)):
         failures.append(f"{key}: kernel span {name!r} disappeared "
                         f"(its Pallas path no longer runs)")
+    for name in sorted(set(bkern) & set(fkern)):
+        notes.append(f"  ~ {key}: kernel span {name!r} timing not "
+                     f"compared ({bkern[name]} -> {fkern[name]})")
     bcnt = base.get("counters") or {}
     fcnt = fresh.get("counters") or {}
     for name in sorted(set(bcnt) - set(fcnt)):
@@ -108,18 +126,29 @@ def compare(payload: dict, baseline: dict):
                         f"{baseline.get('ci_mode')} vs {payload.get('ci_mode')}"
                         f" — sizes are not comparable")
         return failures, notes
+    for field in MACHINE_VARYING_FIELDS:
+        if field in baseline:
+            notes.append(f"  ~ field {field}: machine-varying, not "
+                         f"compared ({baseline.get(field)} -> "
+                         f"{payload.get(field)})")
     brows = {r["name"]: r for r in baseline.get("rows", [])}
     frows = {r["name"]: r for r in payload.get("rows", [])}
     for name in sorted(set(brows) - set(frows)):
         failures.append(f"row {name!r} disappeared from the fresh payload")
     for name in sorted(set(frows) - set(brows)):
         failures.append(f"new row {name!r} (regenerate the baseline)")
-    for name in sorted(set(brows) & set(frows)):
+    shared = sorted(set(brows) & set(frows))
+    for name in shared:
         _compare_row(name, frows[name]["value"], brows[name]["value"],
                      failures, notes)
     for key in ("kernel_breakdown", "kernel_breakdown_pallas"):
         _compare_breakdown(key, payload.get(key), baseline.get(key),
-                           failures)
+                           failures, notes)
+    n_timing = sum(1 for name in shared if _is_timing(name))
+    notes.append(f"  ~ summary: {len(shared) - n_timing} row(s) compared, "
+                 f"{n_timing} timing row(s) and "
+                 f"{len(MACHINE_VARYING_FIELDS)} machine-varying field(s) "
+                 f"excluded")
     return failures, notes
 
 

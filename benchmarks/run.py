@@ -9,11 +9,18 @@ all rows (plus per-suite wall time and a telemetry-on per-stage
 as the ``BENCH_ci.json`` artifact so the repo's perf trajectory is
 recorded per-PR.  ``--profile PATH`` additionally writes the same
 telemetry pass as a standalone ``repro.cli report``-compatible profile.
+
+Every invocation that writes JSON also gets a run id and a structured
+JSONL run log (``--runlog``, default ``<json>.runlog.jsonl``): a
+manifest event, ``suite_start``/``suite_end`` brackets with wall time
+and row counts, captured warnings, the regression-gate verdict, and a
+crash bundle on failure — so a dead CI job leaves a parseable trail.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import platform
@@ -36,6 +43,11 @@ def main() -> None:
                          "baseline JSON (benchmarks/baseline_ci.json) and "
                          "exit non-zero on structural or tolerance-band "
                          "regressions (requires --json)")
+    ap.add_argument("--runlog", default=None, metavar="JSONL",
+                    help="structured run-log path (manifest, per-suite "
+                         "progress, crash bundle). Defaults to "
+                         "<json>.runlog.jsonl when --json is set; 'off' "
+                         "disables")
     args = ap.parse_args()
     if args.baseline and not args.json:
         ap.error("--baseline requires --json")
@@ -43,6 +55,32 @@ def main() -> None:
         # must precede the bench imports: common.py reads it at import
         os.environ["REPRO_BENCH_CI"] = "1"
     picks = set(args.only.split(","))
+    from repro import obs
+    runlog_path = args.runlog
+    if runlog_path is None and args.json:
+        runlog_path = os.path.splitext(args.json)[0] + ".runlog.jsonl"
+    runlog = None
+    if runlog_path and runlog_path not in ("off", "-"):
+        runlog = obs.RunLog(runlog_path)
+        runlog.manifest("benchmarks.run", argv=sys.argv[1:],
+                        ci_mode=args.ci, suites=sorted(picks))
+        print(f"# run {runlog.run_id}: logging events to {runlog_path}",
+              flush=True)
+    try:
+        _run_suites(args, picks, runlog)
+    except SystemExit:
+        raise
+    except BaseException as e:
+        if runlog is not None:
+            runlog.crash(e)
+            runlog.end(status="error")
+            runlog.close()
+        raise
+    if runlog is not None:
+        runlog.close()
+
+
+def _run_suites(args, picks, runlog) -> None:
     from . import common, bench_smem, bench_sal, bench_bsw, bench_e2e, \
         bench_scaling, bench_pe, bench_io
     suites = {
@@ -54,21 +92,30 @@ def main() -> None:
         "pe": ("PE mate rescue (scalar vs batched)", bench_pe.run),
         "io": ("I/O subsystem (ingestion + index bundle)", bench_io.run),
     }
+    warn_ctx = (runlog.capture_warnings() if runlog is not None
+                else contextlib.nullcontext())
     print("name,value,derived")
     suite_s = {}
-    for key, (title, fn) in suites.items():
-        if key not in picks:
-            continue
-        print(f"# --- {title} ---", flush=True)
-        t0 = time.time()
-        fn()
-        suite_s[key] = round(time.time() - t0, 1)
-        print(f"# {key} done in {suite_s[key]:.1f}s", flush=True)
-    breakdown = snap = wall = None
-    breakdown_pallas = None
-    if args.json or args.profile:
-        breakdown, snap, wall = common.profiled_world_run()
-        print(f"# profiled one batched pass in {wall:.2f}s", flush=True)
+    with warn_ctx:
+        for key, (title, fn) in suites.items():
+            if key not in picks:
+                continue
+            print(f"# --- {title} ---", flush=True)
+            if runlog is not None:
+                runlog.emit("suite_start", suite=key, title=title)
+            t0 = time.time()
+            n0 = len(common.ROWS)
+            fn()
+            suite_s[key] = round(time.time() - t0, 1)
+            if runlog is not None:
+                runlog.emit("suite_end", suite=key, wall_s=suite_s[key],
+                            rows=len(common.ROWS) - n0)
+            print(f"# {key} done in {suite_s[key]:.1f}s", flush=True)
+        breakdown = snap = wall = None
+        breakdown_pallas = None
+        if args.json or args.profile:
+            breakdown, snap, wall = common.profiled_world_run()
+            print(f"# profiled one batched pass in {wall:.2f}s", flush=True)
     if args.json:
         # smaller read set: the pallas pass runs the kernel bodies in
         # interpret mode on CPU runners
@@ -85,6 +132,8 @@ def main() -> None:
             "kernel_breakdown": breakdown,
             "kernel_breakdown_pallas": breakdown_pallas,
         }
+        if runlog is not None:
+            payload["run"] = runlog.run_id
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}", flush=True)
@@ -92,16 +141,26 @@ def main() -> None:
             from .regression import compare, render
             failures, notes = compare(payload, json.load(open(args.baseline)))
             print(render(failures, notes), flush=True)
+            if runlog is not None:
+                runlog.emit("regression_gate", failures=len(failures),
+                            notes=len(notes),
+                            detail=failures if failures else None)
             if failures:
+                if runlog is not None:
+                    runlog.end(status="regression", rows=len(common.ROWS))
                 sys.exit(1)
     if args.profile:
         from repro import obs
-        obs.write_profile(args.profile, snap, wall_s=wall,
-                          meta={"source": "benchmarks.run",
-                                "ci_mode": args.ci})
+        meta = {"source": "benchmarks.run", "ci_mode": args.ci}
+        if runlog is not None:
+            meta["run"] = runlog.run_id
+        obs.write_profile(args.profile, snap, wall_s=wall, meta=meta)
         print(f"# wrote profile to {args.profile} "
               f"(render: python -m repro.cli report {args.profile})",
               flush=True)
+    if runlog is not None:
+        runlog.end(status="ok", rows=len(common.ROWS),
+                   suites_s=suite_s)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,8 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import sys
+import threading
+import time
 from typing import Callable, Iterable
 
 import numpy as np
@@ -441,8 +443,17 @@ class Aligner:
             extra.append(f"@PG\tID:repro\tPN:repro\tVN:{VERSION}\tCL:{cl}")
         return _contig_header(self.index, extra=extra)
 
+    def _trace_tail(self) -> list | None:
+        """Last trace events (for a crash bundle), if tracing is on."""
+        if self.telemetry is None or self.telemetry.tracer is None:
+            return None
+        return self.telemetry.tracer.to_dict()["traceEvents"][-32:]
+
     def stream_sam(self, batches: Iterable, out=None, *, header: bool = True,
-                   cl: str | None = None, engine: str | None = None) -> dict:
+                   cl: str | None = None, engine: str | None = None,
+                   runlog: "obs.RunLog | None" = None,
+                   export: "obs.LiveExporter | None" = None,
+                   total_reads: int | None = None) -> dict:
         """Drive an iterable of ``ReadBatch``/``PairBatch`` (e.g. from
         ``repro.io.stream.open_batches``) through the engine and write
         SAM to ``out`` (a path, a file object, or None for stdout).
@@ -454,6 +465,20 @@ class Aligner:
         into per-batch lists.  With telemetry enabled the summary also
         carries the run-level I/O accounting (``time_io_s``, batch
         fill/pad-waste) captured around the batch iterator pulls.
+
+        Run-scoped observability (all optional, none touches the SAM
+        bytes):
+
+        * ``runlog`` — an ``obs.RunLog``: the call emits
+          ``stream_start``, one ``batch`` progress event per batch
+          (reads/s, ETA when ``total_reads`` is given), captures any
+          Python warnings raised while streaming as structured events,
+          emits a ``crash`` diagnostic bundle (partial stats Snapshot,
+          last-batch context, trace tail) if the loop dies, and
+          ``stream_end`` on success.
+        * ``export`` — an ``obs.LiveExporter``: started on a live
+          thread-safe view of the accumulating stats, stopped (with a
+          final flush) when the stream finishes or fails.
         """
         close = False
         if out is None:
@@ -465,37 +490,99 @@ class Aligner:
             close = True
         n_reads = n_records = n_batches = 0
         stats = obs.Snapshot()
+        stats_lock = threading.Lock()
+        t_start = time.perf_counter()
+        last_batch: dict | None = None
         it = iter(batches)
         _end = object()
+        if runlog is not None:
+            runlog.emit("stream_start",
+                        engine=engine or self.options.engine,
+                        out=(None if out is None or hasattr(out, "write")
+                             else str(out)),
+                        total_reads=total_reads)
         try:
             if header:
                 for ln in self.sam_header(cl=cl):
                     print(ln, file=fh)
             with self._scope() as run_reg:
-                # the run-level scope catches the generator-side io
-                # instrumentation: batch packing executes inside next()
-                while True:
-                    with obs.span("io"):
-                        b = next(it, _end)
-                    if b is _end:
-                        break
-                    if hasattr(b, "reads1"):
-                        res = self.align_pairs(b, engine=engine)
-                        n_reads += 2 * len(b)
-                    else:
-                        res = self.align(b, engine=engine)
-                        n_reads += len(b)
-                    with obs.span("io"):
-                        for ln in res.sam():
-                            print(ln, file=fh)
-                    n_records += res.n_records
-                    n_batches += 1
-                    stats.merge_in(res.stats)
+                def live_stats() -> obs.Snapshot:
+                    # thread-safe view for the exporter: copy under the
+                    # lock, then fold in the run registry's current state
+                    with stats_lock:
+                        merged = obs.Snapshot().merge_in(stats)
+                    if run_reg is not None:
+                        merged.merge_in(run_reg.snapshot())
+                    return merged
+
+                if export is not None:
+                    export.start(live_stats)
+                warn_ctx = (runlog.capture_warnings() if runlog is not None
+                            else contextlib.nullcontext())
+                try:
+                    with warn_ctx:
+                        # the run-level scope catches the generator-side
+                        # io instrumentation: batch packing executes
+                        # inside next()
+                        while True:
+                            with obs.span("io"):
+                                b = next(it, _end)
+                            if b is _end:
+                                break
+                            bt0 = time.perf_counter()
+                            if hasattr(b, "reads1"):
+                                res = self.align_pairs(b, engine=engine)
+                                n_reads += 2 * len(b)
+                            else:
+                                res = self.align(b, engine=engine)
+                                n_reads += len(b)
+                            with obs.span("io"):
+                                for ln in res.sam():
+                                    print(ln, file=fh)
+                            n_records += res.n_records
+                            n_batches += 1
+                            with stats_lock:
+                                stats.merge_in(res.stats)
+                            last_batch = {
+                                "i": n_batches - 1, "size": len(b),
+                                "paired": hasattr(b, "reads1"),
+                                "first_name": (str(b.names[0])
+                                               if len(b.names) else None),
+                                "last_name": (str(b.names[-1])
+                                              if len(b.names) else None)}
+                            if runlog is not None:
+                                runlog.batch(
+                                    n_batches - 1,
+                                    reads=(2 * len(b)
+                                           if hasattr(b, "reads1")
+                                           else len(b)),
+                                    records=res.n_records,
+                                    batch_s=time.perf_counter() - bt0,
+                                    reads_total=n_reads,
+                                    records_total=n_records,
+                                    elapsed_s=(time.perf_counter()
+                                               - t_start),
+                                    total_reads=total_reads)
+                except BaseException as e:
+                    if runlog is not None:
+                        runlog.crash(e, snapshot=live_stats(),
+                                     batch=last_batch,
+                                     trace_tail=self._trace_tail())
+                    raise
+                finally:
+                    if export is not None:
+                        export.stop()
             if run_reg is not None:
                 stats.merge_in(run_reg.snapshot())
             fh.flush()
         finally:
             if close:
                 fh.close()
+        wall = time.perf_counter() - t_start
+        if runlog is not None:
+            runlog.emit("stream_end", n_reads=n_reads, n_records=n_records,
+                        n_batches=n_batches, wall_s=round(wall, 6),
+                        reads_per_s=round(n_reads / wall, 3) if wall > 0
+                        else 0.0)
         return dict(n_reads=n_reads, n_records=n_records,
                     n_batches=n_batches, stats=stats)

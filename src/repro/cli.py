@@ -7,9 +7,11 @@ Two subcommands, mirroring the tool the paper accelerates::
                              [-o out.sam] [--interleaved] [--batch-size B]
                              [--shard i/n] [--engine baseline|batched]
                              [--profile prof.json] [--trace trace.json]
+                             [--runlog run.jsonl] [--live PREFIX]
                              [-k -w -r -c -A -B -O -E -L -d -T -U]
                              [-R '@RG\\tID:...']
-    python -m repro.cli report prof.json
+    python -m repro.cli report prof.json              # one profile
+    python -m repro.cli report --merge 'shard*.json'  # cross-shard merge
 
 ``index`` ingests a (gzipped) multi-contig FASTA through
 ``io.fasta.load_reference`` (IUPAC ambiguity -> seeded random base, as
@@ -28,7 +30,14 @@ keeps only every n-th read (pair), the ``repro.dist`` worker partition
 ``--profile out.json`` turns on ``repro.obs`` telemetry and writes the
 paper-style kernel-breakdown profile; ``--trace out.trace.json``
 additionally collects Chrome trace events (load the file in Perfetto or
-chrome://tracing).  ``report`` pretty-prints a saved profile.
+chrome://tracing).  A profiled run also emits run-scoped observability
+by default: a structured JSONL run log (``--runlog``; manifest,
+per-batch progress with reads/s, captured warnings, crash bundle) and
+live metrics files atomically rewritten during the run (``--live``;
+snapshot JSON + Prometheus textfile).  ``report`` pretty-prints one
+saved profile, or — given several paths/globs — Snapshot-merges the
+per-shard profiles into one run-wide breakdown plus a per-shard
+wall-time table with straggler flags (``ft.straggler``).
 """
 
 from __future__ import annotations
@@ -91,6 +100,27 @@ def _options_from_args(args):
                                    kernel_interpret=interp)
 
 
+def _obs_paths(args) -> tuple:
+    """Resolve the run-log path and live-export prefix.
+
+    Explicit ``--runlog``/``--live`` win ('off' disables); otherwise a
+    ``--profile prof.json`` run defaults to ``prof.runlog.jsonl`` +
+    ``prof.live.{json,prom}`` — a profiled run is observable while in
+    flight and leaves a persistent record, not just the exit artifact.
+    """
+    import os
+    stem = os.path.splitext(args.profile)[0] if args.profile else None
+    runlog = args.runlog
+    if runlog is None and stem:
+        runlog = f"{stem}.runlog.jsonl"
+    live = args.live
+    if live is None and stem:
+        live = f"{stem}.live"
+    off = ("off", "-")
+    return (None if runlog in off else runlog,
+            None if live in off else live)
+
+
 def cmd_mem(args, argv) -> int:
     from .api import Aligner
     from .dist.api import read_shard
@@ -118,9 +148,38 @@ def cmd_mem(args, argv) -> int:
                            batch_size=args.batch_size,
                            interleaved=args.interleaved, shard=shard)
     out = None if args.output in (None, "-") else args.output
+    runlog_path, live_prefix = _obs_paths(args)
+    runlog = exporter = None
+    if runlog_path or live_prefix:
+        from . import obs
+        if runlog_path:
+            runlog = obs.RunLog(runlog_path)
+            runlog.manifest("repro.cli mem", argv=argv,
+                            engine=options.engine, options=options,
+                            index=aligner.index,
+                            shard=f"{shard[0]}/{shard[1]}",
+                            reads1=args.reads1, reads2=args.reads2,
+                            interleaved=args.interleaved,
+                            batch_size=args.batch_size)
+            _log(f"run {runlog.run_id}: logging events to {runlog_path}")
+        if live_prefix:
+            exporter = obs.LiveExporter(
+                live_prefix, interval=args.live_interval,
+                meta={"run": runlog.run_id if runlog else "",
+                      "engine": options.engine,
+                      "shard": f"{shard[0]}/{shard[1]}"})
+            _log(f"live metrics at {exporter.json_path} + "
+                 f"{exporter.prom_path} (every {args.live_interval:g}s)")
     t0 = time.time()
-    summary = aligner.stream_sam(batches, out,
-                                 cl=" ".join(["repro.cli"] + list(argv)))
+    try:
+        summary = aligner.stream_sam(batches, out,
+                                     cl=" ".join(["repro.cli"] + list(argv)),
+                                     runlog=runlog, export=exporter)
+    except BaseException:
+        if runlog is not None:       # the crash bundle is already logged
+            runlog.end(status="error")
+            runlog.close()
+        raise
     dt = max(time.time() - t0, 1e-9)
     _log(f"aligned {summary['n_reads']} reads "
          f"({summary['n_records']} SAM records, "
@@ -133,6 +192,8 @@ def cmd_mem(args, argv) -> int:
                 "batches": summary["n_batches"],
                 "shard": f"{shard[0]}/{shard[1]}",
                 "paired": args.reads2 is not None or args.interleaved}
+        if runlog is not None:
+            meta["run"] = runlog.run_id
         obs.write_profile(args.profile, summary["stats"], wall_s=dt,
                           meta=meta)
         _log(f"wrote profile {args.profile} "
@@ -141,18 +202,47 @@ def cmd_mem(args, argv) -> int:
         telemetry.tracer.save(args.trace)
         _log(f"wrote {len(telemetry.tracer)} trace events to {args.trace} "
              f"(load in Perfetto / chrome://tracing)")
+    if runlog is not None:
+        runlog.end(status="ok", n_reads=summary["n_reads"],
+                   n_records=summary["n_records"],
+                   n_batches=summary["n_batches"], wall_s=round(dt, 6))
+        runlog.close()
     return 0
 
 
 def cmd_report(args, argv) -> int:
+    import glob as _glob
     from . import obs
-    try:
-        payload = obs.read_profile(args.profile)
-    except (OSError, ValueError, KeyError) as e:
-        _log(f"error reading {args.profile}: {e}")
-        return 2
-    print(obs.render(payload["snapshot"], wall_s=payload.get("wall_s"),
-                     meta=payload.get("meta")))
+    paths: list[str] = []
+    for pat in args.profiles:
+        hits = sorted(_glob.glob(pat))
+        # a non-matching glob falls through as a literal path so the
+        # read error below names exactly what the user typed
+        for p in (hits or [pat]):
+            if p not in paths:
+                paths.append(p)
+    payloads = []
+    for p in paths:
+        try:
+            payloads.append(obs.read_profile(p))
+        except (OSError, ValueError, KeyError) as e:
+            _log(f"error reading {p}: {e}")
+            return 2
+    if len(payloads) == 1 and not args.merge and not args.out:
+        payload = payloads[0]
+        print(obs.render(payload["snapshot"], wall_s=payload.get("wall_s"),
+                         meta=payload.get("meta")))
+        return 0
+    merged = obs.merge_profiles(payloads, paths=paths)
+    print(obs.render(merged["snapshot"], wall_s=merged["wall_s"],
+                     meta=merged["meta"]))
+    if len(payloads) > 1:
+        print()
+        print(obs.shard_wall_table(merged["shards"]))
+    if args.out:
+        obs.write_merged_profile(args.out, merged)
+        _log(f"wrote merged profile {args.out} "
+             f"({len(payloads)} part(s))")
     return 0
 
 
@@ -203,6 +293,20 @@ def build_parser() -> argparse.ArgumentParser:
     mm.add_argument("--trace", default=None, metavar="JSON",
                     help="also collect Chrome trace events (Perfetto / "
                          "chrome://tracing) and write them here")
+    mm.add_argument("--runlog", default=None, metavar="JSONL",
+                    help="structured run-log path: one JSON event per "
+                         "line (manifest, per-batch progress, warnings, "
+                         "crash bundle). Defaults to <profile>.runlog"
+                         ".jsonl when --profile is set; 'off' disables")
+    mm.add_argument("--live", default=None, metavar="PREFIX",
+                    help="live metrics export: atomically rewrite "
+                         "PREFIX.json (snapshot) + PREFIX.prom "
+                         "(Prometheus textfile) during the run. Defaults "
+                         "to <profile-stem>.live when --profile is set; "
+                         "'off' disables")
+    mm.add_argument("--live-interval", type=float, default=1.0,
+                    metavar="SECS",
+                    help="live-export rewrite interval [1.0]")
     # bwa mem alignment flags (see repro.options.BWA_FLAGS)
     mm.add_argument("-k", type=int, default=None, metavar="INT",
                     help="minimum seed length [19]")
@@ -235,9 +339,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "record)")
     mm.set_defaults(fn=cmd_mem)
 
-    rp = sub.add_parser("report", help="pretty-print a saved --profile "
-                                       "JSON (paper-style kernel breakdown)")
-    rp.add_argument("profile", help="profile JSON written by mem --profile")
+    rp = sub.add_parser("report", help="pretty-print saved --profile "
+                                       "JSON(s); multiple files (or globs) "
+                                       "merge into one cross-shard report")
+    rp.add_argument("profiles", nargs="+", metavar="profile",
+                    help="profile JSON(s) written by mem --profile; "
+                         "multiple paths or globs (e.g. 'shard*.json') "
+                         "are Snapshot-merged into one breakdown plus a "
+                         "per-shard wall-time/straggler table")
+    rp.add_argument("--merge", action="store_true",
+                    help="force merged rendering even for one file "
+                         "(merging is automatic for several)")
+    rp.add_argument("-o", "--out", default=None, metavar="JSON",
+                    help="also write the merged profile (re-loadable by "
+                         "report / read_profile) here")
     rp.set_defaults(fn=cmd_report)
     return ap
 

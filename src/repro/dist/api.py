@@ -101,7 +101,8 @@ def align_shard(aligner, reads1, reads2=None, out=None, *,
                 spec: str | None = None, batch_size: int = 512,
                 interleaved: bool = False, header: bool = True,
                 cl: str | None = None, monitor=None,
-                step: int = 0) -> dict:
+                step: int = 0, runlog=None, export=None,
+                total_reads: int | None = None) -> dict:
     """Stream THIS worker's shard of a FASTQ through an ``Aligner``.
 
     The worker-level building block for multi-worker ``mem``: n processes
@@ -113,24 +114,46 @@ def align_shard(aligner, reads1, reads2=None, out=None, *,
     Returns ``Aligner.stream_sam``'s summary dict extended with the
     shard identity and its wall time (``shard``, ``wall_s``) — the
     ``stats`` entry is an ``obs.Snapshot``, so per-shard summaries merge
-    deterministically (``Snapshot.merge_all``) into a run-wide profile.
-    When an ``ft.straggler.StragglerMonitor`` is passed, the shard's
-    wall time feeds its rolling distribution (``monitor.observe``) and a
-    detected straggle event is surfaced as ``straggler`` in the summary.
+    deterministically (``Snapshot.merge_all``, rendered run-wide by
+    ``repro.cli report --merge``) into one profile.  When an
+    ``ft.straggler.StragglerMonitor`` is passed, the shard's wall time
+    feeds its rolling distribution (``monitor.observe``) and a detected
+    straggle event is surfaced as ``straggler`` in the summary.
+
+    ``runlog``/``export`` are the run-scoped observability hooks of
+    ``Aligner.stream_sam``: with a ``obs.RunLog`` the shard is bracketed
+    by ``shard_start``/``shard_end`` events (shard identity, wall time,
+    reads/s, straggler verdict) around the per-batch progress stream,
+    and a ``obs.LiveExporter`` makes the in-flight shard scrapable.
     """
     import time as _time
     from ..io.stream import open_batches   # deferred: keep dist jax-light
     shard = read_shard(spec)
     batches = open_batches(reads1, reads2, batch_size=batch_size,
                            interleaved=interleaved, shard=shard)
+    if runlog is not None:
+        runlog.emit("shard_start", shard=f"{shard[0]}/{shard[1]}",
+                    reads1=str(reads1),
+                    reads2=None if reads2 is None else str(reads2),
+                    out=None if out is None else str(out), step=step)
     t0 = _time.perf_counter()
-    summary = aligner.stream_sam(batches, out, header=header, cl=cl)
+    summary = aligner.stream_sam(batches, out, header=header, cl=cl,
+                                 runlog=runlog, export=export,
+                                 total_reads=total_reads)
     wall = _time.perf_counter() - t0
     summary["shard"] = shard
     summary["wall_s"] = wall
     if monitor is not None:
         summary["straggler"] = monitor.observe(step, host=shard[0],
                                                step_time=wall)
+    if runlog is not None:
+        ev = summary.get("straggler")
+        runlog.emit("shard_end", shard=f"{shard[0]}/{shard[1]}",
+                    wall_s=round(wall, 6), n_reads=summary["n_reads"],
+                    n_records=summary["n_records"],
+                    reads_per_s=(round(summary["n_reads"] / wall, 3)
+                                 if wall > 0 else 0.0),
+                    straggler=None if ev is None else ev.action)
     return summary
 
 

@@ -32,10 +32,16 @@ class StragglerEvent:
 
 class StragglerMonitor:
     def __init__(self, window: int = 32, threshold: float = 1.8,
-                 persist: int = 3):
+                 persist: int = 3, min_samples: int | None = None):
         self.window = window
         self.threshold = threshold
         self.persist = persist
+        # samples needed before judging: the training-loop default
+        # (max(8, window/4)) suppresses warm-up noise; small-N callers
+        # (e.g. the report's per-shard wall table over a handful of
+        # shard profiles) lower it explicitly
+        self.min_samples = (max(8, window // 4) if min_samples is None
+                            else max(2, int(min_samples)))
         self.times: collections.deque = collections.deque(maxlen=window)
         self.strikes: collections.Counter = collections.Counter()
         self._t0 = None
@@ -54,7 +60,7 @@ class StragglerMonitor:
         when the caller already has real telemetry."""
         dt = float(step_time)
         self.times.append(dt)
-        if len(self.times) < max(8, self.window // 4):
+        if len(self.times) < self.min_samples:
             return None
         med = statistics.median(self.times)
         if dt <= med * self.threshold:

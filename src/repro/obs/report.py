@@ -59,6 +59,20 @@ COUNTERS = (
     ("n_proper", "proper pairs"),
     ("kernel_bsw_dispatches", "Pallas BSW dispatches"),
     ("kernel_fmocc_dispatches", "Pallas fmocc dispatches"),
+    ("io_bases", "bases streamed (io)"),
+)
+
+#: counters that are sums of PER-READ quantities, so a sharded run's
+#: merged Snapshot must match the unsharded run EXACTLY (the shard
+#: filter only re-partitions reads; it never changes what one read
+#: costs).  Batch-shaped counters (dispatch counts, lockstep rounds,
+#: padded cells_total) and PE counters (insert-size stats are
+#: per-batch, so sharding legitimately perturbs rescue/pairing) are
+#: deliberately excluded.  ``repro.cli report --merge`` and the CI
+#: obs-smoke job assert identity on this set.
+SHARD_INVARIANT_COUNTERS = (
+    "io_reads", "io_bases", "sa_lookups", "bsw_tasks",
+    "chains_built", "chains_kept", "cells_useful",
 )
 
 
@@ -222,3 +236,104 @@ def read_profile(path) -> dict:
                          f"{payload.get('version')!r} in {path}")
     payload["snapshot"] = Snapshot.from_jsonable(payload["snapshot"])
     return payload
+
+
+# ---------------------------------------------------------------------
+# Cross-shard aggregation (repro.cli report --merge)
+# ---------------------------------------------------------------------
+
+def merge_profiles(payloads: list[dict], paths=None) -> dict:
+    """Merge N per-shard ``--profile`` payloads into ONE profile.
+
+    The merge is just ``Snapshot.merge_all`` — the associativity PR 6
+    built in is what makes the result independent of merge grouping —
+    so counters sum, stage timers sum to aggregate CPU-seconds, gauges
+    keep the worst shard, and per-batch payloads collect.  Wall time is
+    reported as the MAX across shards (shards run concurrently; the
+    slowest one is the run's wall clock), with the sum kept alongside;
+    stage percentages over 100% of wall are therefore real parallelism,
+    not an error.  A ``shards`` table (one row per input payload, in
+    input order) carries each part's wall time and read count for the
+    straggler rendering.
+    """
+    if not payloads:
+        raise ValueError("merge_profiles needs at least one profile")
+    snap = Snapshot.merge_all([p["snapshot"] for p in payloads])
+    walls = [p.get("wall_s") for p in payloads]
+    known = [w for w in walls if w is not None]
+    wall = max(known) if known else None
+    shards = []
+    for i, p in enumerate(payloads):
+        pmeta = p.get("meta") or {}
+        psnap = p.get("snapshot") or {}
+        shards.append({
+            "path": (paths[i] if paths is not None else None),
+            "shard": pmeta.get("shard"),
+            "wall_s": p.get("wall_s"),
+            "reads": (pmeta.get("reads")
+                      if pmeta.get("reads") is not None
+                      else psnap.get("io_reads")),
+            "engine": pmeta.get("engine"),
+        })
+    meta = {"merged_from": len(payloads),
+            "wall_max_s": round(wall, 6) if wall is not None else None,
+            "wall_sum_s": round(sum(known), 6) if known else None}
+    return {"version": PROFILE_VERSION, "wall_s": wall, "meta": meta,
+            "snapshot": snap, "breakdown": breakdown(snap, wall),
+            "shards": shards}
+
+
+def shard_wall_table(shards: list[dict], *, threshold: float = 1.5) -> str:
+    """Per-shard wall-time table with straggler flags.
+
+    Every shard's wall time is fed through
+    ``ft.straggler.StragglerMonitor.observe`` (the same detector the
+    distributed loop uses, with ``min_samples`` lowered so small merges
+    still judge), and a shard is additionally flagged against the
+    final median so early-arriving stragglers aren't grandfathered in
+    by an immature rolling window.
+    """
+    import statistics
+
+    from ..ft.straggler import StragglerMonitor   # lazy: obs stays ft-free
+
+    rows = [s for s in shards if s.get("wall_s") is not None]
+    lines = ["per-shard wall time (straggler threshold "
+             f"{threshold:g}x median):"]
+    if not rows:
+        lines.append("  (no shard wall times recorded)")
+        return "\n".join(lines)
+    walls = [float(s["wall_s"]) for s in rows]
+    med = statistics.median(walls)
+    mon = StragglerMonitor(window=max(len(walls), 2), threshold=threshold,
+                           persist=2, min_samples=2)
+    events = [mon.observe(step=i, host=i, step_time=w)
+              for i, w in enumerate(walls)]
+    hdr = (f"  {'shard':<10} {'wall_s':>9} {'x median':>9} "
+           f"{'reads':>8}  flag")
+    lines.append(hdr)
+    lines.append("  " + "-" * (len(hdr) - 2))
+    for s, w, ev in zip(rows, walls, events):
+        ratio = w / med if med > 0 else 1.0
+        flag = ""
+        if ratio > threshold or ev is not None:
+            flag = "STRAGGLER"
+            if ev is not None:
+                flag += f" ({ev.action})"
+        shard_id = s.get("shard") or s.get("path") or "?"
+        reads = s.get("reads")
+        lines.append(f"  {str(shard_id):<10} {w:>9.3f} {ratio:>8.2f}x "
+                     f"{(str(reads) if reads is not None else '-'):>8}  "
+                     f"{flag}".rstrip())
+    lines.append(f"  median {med:.3f}s over {len(walls)} shard(s)")
+    return "\n".join(lines)
+
+
+def write_merged_profile(path, merged: dict) -> None:
+    """Persist a ``merge_profiles`` result.  The file is a superset of
+    the ``--profile`` artifact (``read_profile`` loads it back, shards
+    table included), so merged profiles re-merge and re-render."""
+    payload = dict(merged)
+    payload["snapshot"] = merged["snapshot"].to_jsonable()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
