@@ -1,0 +1,101 @@
+"""Distributed ``memdist`` benchmarks: merge overhead and recovery cost.
+
+The resilient multi-shard driver (``repro.dist.run``) promises that
+sharding is free of *output* cost — byte-identical SAM to the unsharded
+run — so the only prices worth measuring are wall-clock ones: the
+deterministic merge at the end, and the re-aligned work when a shard is
+killed and resumed from its checkpoint.  Timing rows carry the ``_s``
+suffix (machine-varying, noted-not-gated by the regression gate); the
+determinism facts — identical merged output, exactly one retry, the
+shard/chunk decomposition — are counts/booleans and ARE gated.
+"""
+
+from __future__ import annotations
+
+import io
+import pathlib
+import tempfile
+import time
+
+from .common import row, scaled, timeit  # noqa: F401  (path setup)
+
+from repro.api import AlignOptions, Aligner  # noqa: E402
+from repro.core.contig import build_contig_index  # noqa: E402
+from repro.data import simulate_pairs_multi, simulate_reference  # noqa: E402
+from repro.data import write_fastq_pair  # noqa: E402
+from repro.dist import run_job  # noqa: E402
+from repro.dist.run import ShardFailure  # noqa: E402
+from repro.io import open_batches  # noqa: E402
+
+REF_N = scaled(60_000, 20_000)
+N_PAIRS = scaled(480, 96)
+READ_LEN = 101
+# ~6 chunks at CI sizes so 3 shards hold 2 chunks each and a kill at
+# local chunk 1 always has completed work to resume past
+CHUNK_BASES = scaled(16_000, 3_200)
+WORKERS = 3
+
+
+def _once_injector(*, shard: int, chunk: int):
+    fired = []
+
+    def inject(s, c):
+        if s == shard and c == chunk and not fired:
+            fired.append(True)
+            raise ShardFailure(f"injected kill: shard {s} chunk {c}")
+
+    return inject
+
+
+def run() -> None:
+    with tempfile.TemporaryDirectory(prefix="repro_bench_dist") as d:
+        d = pathlib.Path(d)
+        contigs = simulate_reference(REF_N, 3, seed=11)
+        r1, r2, _ = simulate_pairs_multi(contigs, N_PAIRS, READ_LEN,
+                                         seed=12, insert_mean=300,
+                                         insert_std=30)
+        fq1, fq2 = str(d / "reads_1.fq"), str(d / "reads_2.fq")
+        write_fastq_pair(fq1, fq2, r1, r2)
+        idx = build_contig_index(dict(contigs))
+
+        # ---- unsharded reference: mem -K --pe-bootstrap --no-pg ----
+        al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+        lead = next(iter(open_batches(fq1, fq2, chunk_bases=CHUNK_BASES,
+                                      chunk_range=(0, 1))))
+        al.pe_stats = al.estimate_pe_stats(lead)
+        buf = io.StringIO()
+        t0 = time.perf_counter()
+        al.stream_sam(open_batches(fq1, fq2, chunk_bases=CHUNK_BASES),
+                      buf, cl=None)
+        t_single = time.perf_counter() - t0
+        ref_sam = buf.getvalue()
+        row("dist/unsharded_wall_s", round(t_single, 3),
+            f"{N_PAIRS} pairs, 1 process")
+
+        # ---- clean 3-shard run ----
+        out_c = d / "clean.sam"
+        s_clean = run_job(al, fq1, fq2, out_c, workdir=d / "wd_clean",
+                          workers=WORKERS, chunk_bases=CHUNK_BASES)
+        row("dist/run_clean_wall_s", round(s_clean["wall_s"], 3),
+            f"{s_clean['n_shards']} shards / {s_clean['n_chunks']} chunks")
+        row("dist/merge_s", round(s_clean["merge_s"], 4),
+            f"{s_clean['merged_bytes']} bytes concat+fsync")
+        row("dist/n_shards", s_clean["n_shards"])
+        row("dist/n_chunks", s_clean["n_chunks"])
+        row("dist/clean_identical_output",
+            int(out_c.read_text() == ref_sam), "vs unsharded mem -K")
+
+        # ---- recovery: kill one shard mid-stream, in-process retry ----
+        out_r = d / "recover.sam"
+        s_rec = run_job(al, fq1, fq2, out_r, workdir=d / "wd_rec",
+                        workers=WORKERS, chunk_bases=CHUNK_BASES,
+                        inject=_once_injector(shard=1, chunk=1))
+        row("dist/run_recovery_wall_s", round(s_rec["wall_s"], 3),
+            "1 injected shard kill, checkpoint resume")
+        row("dist/recovery_retries", s_rec["retries"])
+        row("dist/recovery_identical_output",
+            int(out_r.read_text() == ref_sam), "after kill+resume")
+
+
+if __name__ == "__main__":
+    run()

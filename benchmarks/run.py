@@ -30,7 +30,7 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe,io")
+    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe,io,dist")
     ap.add_argument("--ci", action="store_true",
                     help="CI-smoke sizes for every suite")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -82,7 +82,7 @@ def main() -> None:
 
 def _run_suites(args, picks, runlog) -> None:
     from . import common, bench_smem, bench_sal, bench_bsw, bench_e2e, \
-        bench_scaling, bench_pe, bench_io
+        bench_scaling, bench_pe, bench_io, bench_dist
     suites = {
         "smem": ("Table 4 (SMEM kernel)", bench_smem.run),
         "sal": ("Table 5 (SAL kernel)", bench_sal.run),
@@ -91,6 +91,8 @@ def _run_suites(args, picks, runlog) -> None:
         "scaling": ("Figure 4 (scaling)", bench_scaling.run),
         "pe": ("PE mate rescue (scalar vs batched)", bench_pe.run),
         "io": ("I/O subsystem (ingestion + index bundle)", bench_io.run),
+        "dist": ("Resilient memdist (merge + recovery overhead)",
+                 bench_dist.run),
     }
     warn_ctx = (runlog.capture_warnings() if runlog is not None
                 else contextlib.nullcontext())

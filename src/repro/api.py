@@ -293,7 +293,8 @@ class Aligner:
     """
 
     def __init__(self, index, options: AlignOptions | None = None, *,
-                 telemetry: "obs.Telemetry | bool | None" = None):
+                 telemetry: "obs.Telemetry | bool | None" = None,
+                 pe_stats=None):
         self.index = index
         self.options = options or AlignOptions()
         get_engine(self.options.engine)        # fail fast on a bad name
@@ -302,6 +303,9 @@ class Aligner:
         elif telemetry is False:
             telemetry = None
         self.telemetry: obs.Telemetry | None = telemetry
+        # frozen insert-size stats (PairStat[4]); when set, align_pairs
+        # uses them instead of per-batch estimation — see estimate_pe_stats
+        self.pe_stats = None if pe_stats is None else list(pe_stats)
         self._rg: tuple[str, str] | None = None
         if self.options.read_group:
             self._rg = parse_read_group(self.options.read_group)
@@ -420,16 +424,43 @@ class Aligner:
         eng = self._engine(engine)
         if eng.pe is None:
             raise ValueError(f"engine {eng.name!r} has no paired-end driver")
+        peopt = self.options.pe_options()
+        if self.pe_stats is not None and peopt.frozen_pes is None:
+            peopt = dataclasses.replace(peopt,
+                                        frozen_pes=tuple(self.pe_stats))
         with self._scope() as reg:
             lines, st = eng.pe(self.index, r1, r2,
                                self.options.pipeline_options(),
-                               self.options.pe_options(), names)
+                               peopt, names)
         stats = obs.Snapshot(st)
         if reg is not None:
             stats.merge_in(reg.snapshot())
         return BatchResult(names=names, lens=lens, stats=stats,
                            paired=True, alignments=None,
                            _sam_body=self._tag(lines))
+
+    def estimate_pe_stats(self, batch1, batch2=None, *,
+                          engine: str | None = None) -> list:
+        """Bootstrap insert-size stats from one leading pair batch.
+
+        SE-aligns both ends and runs the exact ``mem_pestat`` estimator
+        the PE drivers use, so freezing the result (``self.pe_stats`` /
+        ``PEOptions.frozen_pes``) reproduces byte-for-byte what a plain
+        ``align_pairs`` of that same batch would have estimated.  This is
+        how ``repro.dist.run`` gives every shard one shared estimate.
+
+        Returns ``PairStat[4]`` (does NOT mutate ``self.pe_stats``).
+        """
+        from .pe import estimate_pestat
+        r1, r2, _names, _lens = _coerce_pe(batch1, batch2, None)
+        eng = self._engine(engine)
+        popt = self.options.pipeline_options()
+        n = len(r1)
+        both = np.concatenate([r1, r2], axis=0)
+        with self._scope():
+            res, _ = eng.se(self.index, both, popt)
+        return estimate_pestat(res[:n], res[n:], self.index,
+                               max_ins=self.options.pe_options().max_ins)
 
     # -- SAM emission --
 

@@ -5,11 +5,16 @@ Two subcommands, mirroring the tool the paper accelerates::
     python -m repro.cli index ref.fa[.gz] [-p PREFIX]
     python -m repro.cli mem  ref.fa reads_1.fq[.gz] [reads_2.fq[.gz]]
                              [-o out.sam] [--interleaved] [--batch-size B]
+                             [-K BASES] [--pe-bootstrap] [--no-pg]
                              [--shard i/n] [--engine baseline|batched]
                              [--profile prof.json] [--trace trace.json]
                              [--runlog run.jsonl] [--live PREFIX]
                              [-k -w -r -c -A -B -O -E -L -d -T -U]
                              [-R '@RG\\tID:...']
+    python -m repro.cli memdist ref.fa reads_1.fq [reads_2.fq]
+                             [-o out.sam] [-n WORKERS] [-K BASES]
+                             [--workdir DIR] [--max-retries N]
+                             [--runlog run.jsonl] [--no-pg] [...mem flags]
     python -m repro.cli report prof.json              # one profile
     python -m repro.cli report --merge 'shard*.json'  # cross-shard merge
 
@@ -26,6 +31,16 @@ via ``Aligner.stream_sam`` — ``@SQ``/``@RG``/``@PG`` headers, per-record
 ``RG:Z:`` tags when ``-R`` is given, file or stdout.  ``--shard i/n``
 keeps only every n-th read (pair), the ``repro.dist`` worker partition
 (defaults to this process's rank under a multi-process jax runtime).
+
+``memdist`` is the resilient multi-shard form of ``mem``
+(``repro.dist.run``): the input is decomposed into bwa ``-K`` fixed-base
+chunks, contiguous chunk ranges run on a worker pool with per-chunk
+checkpoints (crashed/straggling shards auto-retry and RESUME), the
+insert-size estimate is bootstrapped once from the leading chunk, and
+the per-shard SAMs merge deterministically — byte-identical to
+``mem -K <same> --pe-bootstrap`` on the same input (compare with
+``--no-pg``, since ``@PG`` records each invocation).  Fault injection
+for drills: ``REPRO_FT_INJECT="shard:chunk[:fail|fatal]"``.
 
 ``--profile out.json`` turns on ``repro.obs`` telemetry and writes the
 paper-style kernel-breakdown profile; ``--trace out.trace.json``
@@ -144,9 +159,22 @@ def cmd_mem(args, argv) -> int:
     except ValueError as e:
         _log(f"error: {e}")
         return 2
+    paired = args.reads2 is not None or args.interleaved
+    if args.pe_bootstrap:
+        if not paired or not args.chunk_bases:
+            _log("error: --pe-bootstrap needs paired input and -K")
+            return 2
+        lead = next(iter(open_batches(args.reads1, args.reads2,
+                                      interleaved=args.interleaved,
+                                      chunk_bases=args.chunk_bases,
+                                      chunk_range=(0, 1))))
+        aligner.pe_stats = aligner.estimate_pe_stats(lead)
+        _log("froze insert-size stats from the leading chunk "
+             "(--pe-bootstrap)")
     batches = open_batches(args.reads1, args.reads2,
                            batch_size=args.batch_size,
-                           interleaved=args.interleaved, shard=shard)
+                           interleaved=args.interleaved, shard=shard,
+                           chunk_bases=args.chunk_bases)
     out = None if args.output in (None, "-") else args.output
     runlog_path, live_prefix = _obs_paths(args)
     runlog = exporter = None
@@ -171,9 +199,9 @@ def cmd_mem(args, argv) -> int:
             _log(f"live metrics at {exporter.json_path} + "
                  f"{exporter.prom_path} (every {args.live_interval:g}s)")
     t0 = time.time()
+    cl = None if args.no_pg else " ".join(["repro.cli"] + list(argv))
     try:
-        summary = aligner.stream_sam(batches, out,
-                                     cl=" ".join(["repro.cli"] + list(argv)),
+        summary = aligner.stream_sam(batches, out, cl=cl,
                                      runlog=runlog, export=exporter)
     except BaseException:
         if runlog is not None:       # the crash bundle is already logged
@@ -206,6 +234,85 @@ def cmd_mem(args, argv) -> int:
         runlog.end(status="ok", n_reads=summary["n_reads"],
                    n_records=summary["n_records"],
                    n_batches=summary["n_batches"], wall_s=round(dt, 6))
+        runlog.close()
+    return 0
+
+
+def cmd_memdist(args, argv) -> int:
+    from .api import Aligner
+    from .dist.run import FatalShardFailure, JobAbandoned, run_job
+
+    try:
+        options = _options_from_args(args)
+    except ValueError as e:
+        _log(f"error: {e}")
+        return 2
+    out = None if args.output in (None, "-") else args.output
+    workdir = args.workdir
+    if workdir is None:
+        if out is None:
+            _log("error: memdist needs --workdir when writing to stdout")
+            return 2
+        workdir = str(out) + ".work"
+    try:
+        aligner = Aligner.from_index(_load_or_build(args.ref), options)
+    except ValueError as e:
+        _log(f"error: {e}")
+        return 2
+    runlog = None
+    if args.runlog not in (None, "off", "-"):
+        from . import obs
+        runlog = obs.RunLog(args.runlog)
+        runlog.manifest("repro.cli memdist", argv=argv,
+                        engine=options.engine, options=options,
+                        index=aligner.index, reads1=args.reads1,
+                        reads2=args.reads2, interleaved=args.interleaved,
+                        workers=args.workers, chunk_bases=args.chunk_bases,
+                        workdir=str(workdir))
+        _log(f"run {runlog.run_id}: logging events to {args.runlog}")
+    # the @PG CL records the decomposition, not this invocation's argv:
+    # a resumed run (different argv) must produce identical bytes
+    cl = None if args.no_pg else (
+        f"repro.cli memdist -K {args.chunk_bases} -n {args.workers}")
+    t0 = time.time()
+    try:
+        summary = run_job(
+            aligner, args.reads1, args.reads2, out, workdir=workdir,
+            workers=args.workers, chunk_bases=args.chunk_bases,
+            interleaved=args.interleaved, cl=cl,
+            max_retries=args.max_retries,
+            retry_backoff_s=args.retry_backoff,
+            runlog=runlog, keep_workdir=args.keep_workdir)
+    except JobAbandoned as e:
+        _log(f"error: {e}")
+        if runlog is not None:
+            runlog.end(status="abandoned")
+            runlog.close()
+        return 1
+    except FatalShardFailure as e:
+        _log(f"fatal shard failure: {e}")
+        _log(f"completed work is checkpointed under {workdir}; "
+             f"rerun the same command to resume")
+        if runlog is not None:
+            runlog.end(status="fatal")
+            runlog.close()
+        return 3
+    except BaseException:
+        if runlog is not None:
+            runlog.end(status="error")
+            runlog.close()
+        raise
+    dt = max(time.time() - t0, 1e-9)
+    _log(f"aligned {summary['n_reads']} reads across "
+         f"{summary['n_shards']} shard(s) ({summary['n_chunks']} chunks, "
+         f"{summary['retries']} retr{'y' if summary['retries'] == 1 else 'ies'}"
+         f", engine={options.engine}) in {dt:.1f}s "
+         f"({summary['n_reads'] / dt:.1f} reads/s, merge "
+         f"{summary['merge_s'] * 1e3:.0f}ms)")
+    if runlog is not None:
+        runlog.end(status="ok", n_reads=summary["n_reads"],
+                   n_records=summary["n_records"],
+                   retries=summary["retries"], wall_s=round(dt, 6))
         runlog.close()
     return 0
 
@@ -246,6 +353,64 @@ def cmd_report(args, argv) -> int:
     return 0
 
 
+def _add_align_flags(p) -> None:
+    """Flags shared by every aligning subcommand (mem, memdist): engine
+    selection, fixed-base chunking, @PG suppression, and the bwa
+    alignment flags of ``repro.options.BWA_FLAGS``."""
+    p.add_argument("--engine", default="batched",
+                   help="registered alignment engine: baseline, batched, "
+                        "pallas, or any repro.api.engines() entry "
+                        "(default: batched)")
+    p.add_argument("--kernel-interpret", default="auto",
+                   choices=("auto", "on", "off"),
+                   help="Pallas kernel mode for --engine pallas: auto "
+                        "resolves from the JAX backend (interpret on "
+                        "CPU, compiled on TPU/GPU) [auto]")
+    p.add_argument("-K", "--chunk-bases", type=int, default=None,
+                   metavar="INT",
+                   help="process INT input bases per chunk (bwa -K): "
+                        "batch decomposition — and output — becomes "
+                        "worker/batch-size-invariant")
+    p.add_argument("--pe-bootstrap", action="store_true",
+                   help="estimate PE insert-size stats ONCE on the "
+                        "leading chunk and freeze them for the whole run "
+                        "(needs -K and paired input; memdist always does "
+                        "this)")
+    p.add_argument("--no-pg", action="store_true",
+                   help="omit the @PG header line (whose CL differs per "
+                        "invocation) — for byte-comparing runs")
+    # bwa mem alignment flags (see repro.options.BWA_FLAGS)
+    p.add_argument("-k", type=int, default=None, metavar="INT",
+                   help="minimum seed length [19]")
+    p.add_argument("-w", type=int, default=None, metavar="INT",
+                   help="band width [100]")
+    p.add_argument("-r", type=float, default=None, metavar="FLOAT",
+                   help="reseed trigger: split SMEMs longer than "
+                        "FLOAT*k [1.5]")
+    p.add_argument("-c", type=int, default=None, metavar="INT",
+                   help="skip seeds with more than INT occurrences [500]")
+    p.add_argument("-A", type=int, default=None, metavar="INT",
+                   help="match score [1]")
+    p.add_argument("-B", type=int, default=None, metavar="INT",
+                   help="mismatch penalty [4]")
+    p.add_argument("-O", default=None, metavar="INT[,INT]",
+                   help="gap open penalty (deletion,insertion) [6,6]")
+    p.add_argument("-E", default=None, metavar="INT[,INT]",
+                   help="gap extension penalty [1,1]")
+    p.add_argument("-L", default=None, metavar="INT[,INT]",
+                   help="5'- and 3'-end clipping penalty [5,5]")
+    p.add_argument("-d", type=int, default=None, metavar="INT",
+                   help="Z-drop [100]")
+    p.add_argument("-T", type=int, default=None, metavar="INT",
+                   help="minimum output alignment score [30]")
+    p.add_argument("-U", type=int, default=None, metavar="INT",
+                   help="unpaired read-pair penalty [17]")
+    p.add_argument("-R", "--read-group", default=None, metavar="STR",
+                   help=r"read group header line, e.g. '@RG\tID:sample' "
+                        "(emits the @RG header and an RG:Z: tag on every "
+                        "record)")
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.cli",
@@ -278,15 +443,7 @@ def build_parser() -> argparse.ArgumentParser:
     mm.add_argument("--shard", default=None, metavar="i/n",
                     help="stream only shard i of n (default: this "
                          "process's repro.dist rank, else everything)")
-    mm.add_argument("--engine", default="batched",
-                    help="registered alignment engine: baseline, batched, "
-                         "pallas, or any repro.api.engines() entry "
-                         "(default: batched)")
-    mm.add_argument("--kernel-interpret", default="auto",
-                    choices=("auto", "on", "off"),
-                    help="Pallas kernel mode for --engine pallas: auto "
-                         "resolves from the JAX backend (interpret on "
-                         "CPU, compiled on TPU/GPU) [auto]")
+    _add_align_flags(mm)
     mm.add_argument("--profile", default=None, metavar="JSON",
                     help="enable telemetry and write the kernel-breakdown "
                          "profile here (render with `repro.cli report`)")
@@ -307,37 +464,43 @@ def build_parser() -> argparse.ArgumentParser:
     mm.add_argument("--live-interval", type=float, default=1.0,
                     metavar="SECS",
                     help="live-export rewrite interval [1.0]")
-    # bwa mem alignment flags (see repro.options.BWA_FLAGS)
-    mm.add_argument("-k", type=int, default=None, metavar="INT",
-                    help="minimum seed length [19]")
-    mm.add_argument("-w", type=int, default=None, metavar="INT",
-                    help="band width [100]")
-    mm.add_argument("-r", type=float, default=None, metavar="FLOAT",
-                    help="reseed trigger: split SMEMs longer than "
-                         "FLOAT*k [1.5]")
-    mm.add_argument("-c", type=int, default=None, metavar="INT",
-                    help="skip seeds with more than INT occurrences [500]")
-    mm.add_argument("-A", type=int, default=None, metavar="INT",
-                    help="match score [1]")
-    mm.add_argument("-B", type=int, default=None, metavar="INT",
-                    help="mismatch penalty [4]")
-    mm.add_argument("-O", default=None, metavar="INT[,INT]",
-                    help="gap open penalty (deletion,insertion) [6,6]")
-    mm.add_argument("-E", default=None, metavar="INT[,INT]",
-                    help="gap extension penalty [1,1]")
-    mm.add_argument("-L", default=None, metavar="INT[,INT]",
-                    help="5'- and 3'-end clipping penalty [5,5]")
-    mm.add_argument("-d", type=int, default=None, metavar="INT",
-                    help="Z-drop [100]")
-    mm.add_argument("-T", type=int, default=None, metavar="INT",
-                    help="minimum output alignment score [30]")
-    mm.add_argument("-U", type=int, default=None, metavar="INT",
-                    help="unpaired read-pair penalty [17]")
-    mm.add_argument("-R", "--read-group", default=None, metavar="STR",
-                    help=r"read group header line, e.g. '@RG\tID:sample' "
-                         "(emits the @RG header and an RG:Z: tag on every "
-                         "record)")
     mm.set_defaults(fn=cmd_mem)
+
+    md = sub.add_parser(
+        "memdist",
+        help="resilient multi-shard mem: checkpointed shard execution, "
+             "auto-retry, deterministic SAM merge")
+    md.add_argument("ref", help="index bundle prefix (or FASTA to build "
+                                "in-memory)")
+    md.add_argument("reads1", help="FASTQ (plain or .gz)")
+    md.add_argument("reads2", nargs="?", default=None,
+                    help="mate FASTQ for split paired-end input")
+    md.add_argument("-o", "--output", default=None,
+                    help="merged SAM path (default: stdout; byte-identical "
+                         "to `mem -K ... --pe-bootstrap` on the same input)")
+    md.add_argument("-p", "--interleaved", action="store_true",
+                    help="reads1 is interleaved R1/R2 (bwa mem -p)")
+    md.add_argument("-n", "--workers", type=int, default=3, metavar="N",
+                    help="worker shards; output bytes do NOT depend on "
+                         "this (fixed-base chunking) [3]")
+    md.add_argument("--workdir", default=None, metavar="DIR",
+                    help="durable job scratch (plan, per-shard SAMs + "
+                         "checkpoints); rerunning with the same workdir "
+                         "RESUMES [<output>.work]")
+    md.add_argument("--max-retries", type=int, default=2, metavar="N",
+                    help="per-shard retry cap before the job is "
+                         "abandoned [2]")
+    md.add_argument("--retry-backoff", type=float, default=0.05,
+                    metavar="SECS",
+                    help="base of the exponential retry backoff [0.05]")
+    md.add_argument("--keep-workdir", action="store_true",
+                    help="keep the workdir after a successful merge")
+    md.add_argument("--runlog", default=None, metavar="JSONL",
+                    help="structured run-log path (job_plan, shard_batch, "
+                         "shard_retry/shard_abandoned, merge events); "
+                         "'off' disables")
+    _add_align_flags(md)
+    md.set_defaults(fn=cmd_memdist, chunk_bases=100_000)
 
     rp = sub.add_parser("report", help="pretty-print saved --profile "
                                        "JSON(s); multiple files (or globs) "

@@ -1,4 +1,6 @@
 from .api import active_mesh, constrain, current_mesh, get_option, options  # noqa: F401
+from .run import (JobAbandoned, JobPlan, load_plan, plan_job,  # noqa: F401
+                  run_job)
 from .sharding import (ShardingRules, make_batch_specs,  # noqa: F401
                        make_cache_specs, make_param_specs, moment_specs,
                        rules_for)

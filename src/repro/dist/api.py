@@ -92,7 +92,17 @@ def read_shard(spec: str | None = None) -> tuple[int, int]:
     try:
         n = jax.process_count()
         i = jax.process_index()
-    except Exception:               # uninitialized backend: act unsharded
+    except RuntimeError as e:
+        # jax raises RuntimeError for an uninitialized/unavailable backend;
+        # anything else (bad distributed config, typos) should propagate —
+        # a silent (0, 1) there would make every worker align every read.
+        import warnings
+        from .. import obs
+        obs.count("dist_rank_fallback")
+        warnings.warn(
+            f"read_shard: jax backend unavailable ({e}); falling back to "
+            f"unsharded (0, 1) — pass an explicit 'i/n' spec to pin ranks",
+            RuntimeWarning, stacklevel=2)
         return 0, 1
     return (i, n) if n > 1 else (0, 1)
 

@@ -21,6 +21,62 @@ import dataclasses
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """One worker's contiguous chunk range of a fixed-base-chunked run.
+
+    ``start``/``stop`` index the global chunk ordinals of
+    ``repro.io.plan_chunks`` (half-open).  Contiguity is load-bearing:
+    the deterministic SAM merge is a plain concatenation in shard order,
+    which equals the unsharded chunk order only because shard i's chunks
+    all precede shard i+1's.
+    """
+    shard: int
+    start: int
+    stop: int
+
+    @property
+    def n_chunks(self) -> int:
+        return self.stop - self.start
+
+
+def plan_shards(n_reads_hint: int, workers: int, chunk_bases: int, *,
+                n_chunks: int | None = None,
+                read_len_hint: int = 101) -> list[ShardPlan]:
+    """Alignment-shaped re-plan: split a chunked read set over workers.
+
+    The fixed-base chunk decomposition (bwa ``-K``) is a property of the
+    INPUT, not of this plan — so re-planning the same chunk ordinals over
+    a different worker count (elastic shrink after a lost worker, or a
+    retry of a failed shard's remaining range) never changes any chunk's
+    content, only who aligns it.  Pass the exact ``n_chunks`` when known
+    (``len(repro.io.plan_chunks(...))``); otherwise it is estimated from
+    ``n_reads_hint * read_len_hint / chunk_bases``.
+
+    Returns one contiguous, balanced ``ShardPlan`` per worker (at most
+    ``min(workers, n_chunks)`` non-empty shards; remainder chunks go to
+    the leading shards, matching the balanced-contiguous split).
+    """
+    if workers < 1:
+        raise ValueError("workers must be >= 1")
+    if chunk_bases < 1:
+        raise ValueError("chunk_bases must be >= 1")
+    if n_chunks is None:
+        if n_reads_hint < 0:
+            raise ValueError("n_reads_hint must be >= 0")
+        n_chunks = max(
+            1, -(-n_reads_hint * max(read_len_hint, 1) // chunk_bases))
+    n_shards = min(workers, n_chunks)
+    plans: list[ShardPlan] = []
+    base, rem = divmod(n_chunks, max(n_shards, 1))
+    start = 0
+    for s in range(n_shards):
+        size = base + (1 if s < rem else 0)
+        plans.append(ShardPlan(shard=s, start=start, stop=start + size))
+        start += size
+    return plans
+
+
+@dataclasses.dataclass(frozen=True)
 class ElasticPlan:
     data: int
     model: int

@@ -18,4 +18,5 @@ from .fastq import (FastqRecord, encode_read, pair_qname,  # noqa: F401
 from .store import (INDEX_VERSION, have_index, index_paths,  # noqa: F401
                     load_index, save_index)
 from .stream import (PairBatch, ReadBatch, open_batches,  # noqa: F401
-                     pack_reads, stream_batches, stream_pair_batches)
+                     pack_reads, plan_chunks, stream_batches,
+                     stream_pair_batches)

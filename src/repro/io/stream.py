@@ -16,11 +16,25 @@ feed its iterator straight to ``Aligner.stream_sam``):
   whose GLOBAL ordinal is ``i (mod n)`` — the same partition no matter
   the batch size, which is what lets ``repro.dist`` workers each stream
   their slice of one FASTQ with no coordination beyond rank/world-size
-  (see ``repro.dist.api.read_shard``).
+  (see ``repro.dist.api.read_shard``);
+* bwa ``-K``-style FIXED-BASE chunking (``chunk_bases``): a batch is
+  flushed once its accumulated true base count reaches the threshold,
+  so the batch decomposition depends only on the input file and the
+  threshold — NOT on batch_size, worker count or scheduling.  That is
+  exactly why production pipelines pin ``bwa mem -K`` (nf-core runs
+  ``-K 100000000`` so output is thread-count-invariant): per-batch
+  decisions (PE insert-size estimates) land on the same batches no
+  matter how the work is spread.  ``plan_chunks`` pre-scans the same
+  decomposition without packing anything, and ``chunk_range=(lo, hi)``
+  streams only chunks ``lo..hi-1`` — the contiguous-chunk shard
+  assignment of the resilient ``repro.dist.run`` driver (and its
+  resume path, which bumps ``lo`` past completed chunks).
 
 Like bwa (which processes reads in ~10 Mbp chunks and estimates the
 insert-size distribution per chunk), the PE statistics downstream are
-per-batch: pick ``batch_size`` large enough for stable estimates.
+per-batch: pick ``batch_size`` (or ``chunk_bases``) large enough for
+stable estimates — or freeze a bootstrap estimate via
+``Aligner.estimate_pe_stats``.
 """
 
 from __future__ import annotations
@@ -95,6 +109,80 @@ def _sharded(it, shard):
             yield item
 
 
+def check_chunking(chunk_bases, chunk_range):
+    if chunk_bases is None:
+        if chunk_range is not None:
+            raise ValueError("chunk_range needs chunk_bases")
+        return None, None
+    chunk_bases = int(chunk_bases)
+    if chunk_bases < 1:
+        raise ValueError("chunk_bases must be >= 1")
+    if chunk_range is not None:
+        lo, hi = int(chunk_range[0]), int(chunk_range[1])
+        if not 0 <= lo <= hi:
+            raise ValueError(f"bad chunk_range {chunk_range}: "
+                             f"need 0 <= lo <= hi")
+        chunk_range = (lo, hi)
+    return chunk_bases, chunk_range
+
+
+def _chunked(it, chunk_bases, nbases, chunk_range=None):
+    """Group a record stream into fixed-base chunks (the ONE flush rule
+    shared by the streamers and ``plan_chunks``): a chunk closes as soon
+    as its accumulated ``nbases(item)`` reaches ``chunk_bases``.  With
+    ``chunk_range=(lo, hi)`` only chunks ``lo..hi-1`` are yielded (the
+    rest are still counted, so chunk identity is global)."""
+    lo, hi = (0, None) if chunk_range is None else chunk_range
+    buf: list = []
+    bases = 0
+    ordinal = 0
+
+    def keep():
+        return ordinal >= lo and (hi is None or ordinal < hi)
+
+    for item in it:
+        if hi is not None and ordinal >= hi and not buf:
+            return                      # past the window: stop reading
+        buf.append(item)
+        bases += nbases(item)
+        if bases >= chunk_bases:
+            if keep():
+                yield ordinal, buf
+            ordinal += 1
+            buf, bases = [], 0
+    if buf and keep():
+        yield ordinal, buf
+
+
+def plan_chunks(path1, path2=None, *, chunk_bases: int,
+                interleaved: bool = False) -> list[tuple[int, int]]:
+    """Pre-scan the fixed-base chunk decomposition of a FASTQ (pair).
+
+    Returns one ``(n_reads, n_bases)`` entry per chunk — for pairs,
+    reads and bases count BOTH ends, matching the streamers' flush rule
+    exactly (same ``_chunked`` generator), so ``plan_chunks`` followed by
+    ``open_batches(chunk_bases=..., chunk_range=(i, i+1))`` reproduces
+    chunk ``i`` byte-for-byte.  This is the planning pass of the
+    resilient multi-shard driver (``repro.dist.run``): the chunk list is
+    frozen into the job manifest and chunks are dealt to shards as
+    contiguous ranges.
+    """
+    chunk_bases, _ = check_chunking(chunk_bases, None)
+    if interleaved and path2 is not None:
+        raise ValueError("interleaved input takes a single FASTQ")
+    if path2 is not None or interleaved:
+        pairs = (read_fastq_interleaved(path1) if interleaved
+                 else read_fastq_paired(path1, path2))
+        return [(2 * len(chunk),
+                 sum(len(r1.seq) + len(r2.seq) for r1, r2 in chunk))
+                for _, chunk in _chunked(
+                    pairs, chunk_bases,
+                    lambda p: len(p[0].seq) + len(p[1].seq))]
+    return [(len(chunk), sum(len(r.seq) for r in chunk))
+            for _, chunk in _chunked(read_fastq(path1), chunk_bases,
+                                     lambda r: len(r.seq))]
+
+
 def pack_reads(seqs: list[str], width: int | None = None
                ) -> tuple[np.ndarray, np.ndarray]:
     """Encode + right-pad a list of read strings to one (B, width) array
@@ -108,73 +196,105 @@ def pack_reads(seqs: list[str], width: int | None = None
     return out, lens
 
 
-def stream_batches(path, batch_size: int = 512, *,
-                   shard=None) -> Iterator[ReadBatch]:
-    """Single-end FASTQ -> fixed-size padded ``ReadBatch``es."""
+def _pack_se(names: list, seqs: list) -> ReadBatch:
+    reads, lens = pack_reads(seqs)
+    _note_batch(len(names), reads.size, int(lens.sum()))
+    return ReadBatch(list(names), reads, lens)
+
+
+def _pack_pe(names: list, s1: list, s2: list) -> PairBatch:
+    # ONE width across both ends: the PE driver stacks R1 and R2 into
+    # a single (2B, L) batch, so per-side maxima must agree
+    w = max(max(map(len, s1)), max(map(len, s2)))
+    reads1, lens1 = pack_reads(s1, w)
+    reads2, lens2 = pack_reads(s2, w)
+    _note_batch(2 * len(names), reads1.size + reads2.size,
+                int(lens1.sum() + lens2.sum()))
+    return PairBatch(list(names), reads1, reads2, lens1, lens2)
+
+
+def stream_batches(path, batch_size: int = 512, *, shard=None,
+                   chunk_bases: int | None = None,
+                   chunk_range=None) -> Iterator[ReadBatch]:
+    """Single-end FASTQ -> fixed-size padded ``ReadBatch``es.
+
+    With ``chunk_bases`` set, batches are fixed-BASE chunks instead
+    (bwa ``-K``; ``batch_size`` is ignored) and ``chunk_range=(lo, hi)``
+    keeps only that contiguous chunk window.
+    """
     if batch_size < 1:
         raise ValueError("batch_size must be >= 1")
     shard = check_shard(shard)
+    chunk_bases, chunk_range = check_chunking(chunk_bases, chunk_range)
+    records = _sharded(read_fastq(path), shard)
+    if chunk_bases is not None:
+        for _, chunk in _chunked(records, chunk_bases,
+                                 lambda r: len(r.seq), chunk_range):
+            yield _pack_se([r.name for r in chunk], [r.seq for r in chunk])
+        return
     names: list[str] = []
     seqs: list[str] = []
-    for rec in _sharded(read_fastq(path), shard):
+    for rec in records:
         names.append(rec.name)
         seqs.append(rec.seq)
         if len(names) == batch_size:
-            reads, lens = pack_reads(seqs)
-            _note_batch(len(names), reads.size, int(lens.sum()))
-            yield ReadBatch(names, reads, lens)
+            yield _pack_se(names, seqs)
             names, seqs = [], []
     if names:
-        reads, lens = pack_reads(seqs)
-        _note_batch(len(names), reads.size, int(lens.sum()))
-        yield ReadBatch(names, reads, lens)
+        yield _pack_se(names, seqs)
 
 
 def stream_pair_batches(path1, path2=None, batch_size: int = 512, *,
-                        interleaved: bool = False,
-                        shard=None) -> Iterator[PairBatch]:
+                        interleaved: bool = False, shard=None,
+                        chunk_bases: int | None = None,
+                        chunk_range=None) -> Iterator[PairBatch]:
     """Paired FASTQ (split R1/R2 files, or one interleaved file) ->
     synchronized ``PairBatch``es; ``shard`` partitions by PAIR ordinal so
-    mates never land on different workers."""
+    mates never land on different workers.  ``chunk_bases`` switches to
+    fixed-base chunk batches counting BOTH ends (pairs are never split
+    across chunks); ``chunk_range`` as in :func:`stream_batches`."""
     if batch_size < 1:
         raise ValueError("batch_size must be >= 1")
     if interleaved and path2 is not None:
         raise ValueError("interleaved input takes a single FASTQ")
     shard = check_shard(shard)
-    pairs = (read_fastq_interleaved(path1) if interleaved
-             else read_fastq_paired(path1, path2))
+    chunk_bases, chunk_range = check_chunking(chunk_bases, chunk_range)
+    pairs = _sharded(read_fastq_interleaved(path1) if interleaved
+                     else read_fastq_paired(path1, path2), shard)
+    if chunk_bases is not None:
+        for _, chunk in _chunked(
+                pairs, chunk_bases,
+                lambda p: len(p[0].seq) + len(p[1].seq), chunk_range):
+            yield _pack_pe([pair_qname(r1.name, r2.name)
+                            for r1, r2 in chunk],
+                           [r1.seq for r1, _ in chunk],
+                           [r2.seq for _, r2 in chunk])
+        return
     names: list[str] = []
     s1: list[str] = []
     s2: list[str] = []
-    def flush():
-        # ONE width across both ends: the PE driver stacks R1 and R2 into
-        # a single (2B, L) batch, so per-side maxima must agree
-        w = max(max(map(len, s1)), max(map(len, s2)))
-        reads1, lens1 = pack_reads(s1, w)
-        reads2, lens2 = pack_reads(s2, w)
-        _note_batch(2 * len(names), reads1.size + reads2.size,
-                    int(lens1.sum() + lens2.sum()))
-        return PairBatch(list(names), reads1, reads2, lens1, lens2)
-
-    for r1, r2 in _sharded(pairs, shard):
+    for r1, r2 in pairs:
         names.append(pair_qname(r1.name, r2.name))
         s1.append(r1.seq)
         s2.append(r2.seq)
         if len(names) == batch_size:
-            yield flush()
+            yield _pack_pe(names, s1, s2)
             names, s1, s2 = [], [], []
     if names:
-        yield flush()
+        yield _pack_pe(names, s1, s2)
 
 
 def open_batches(path1, path2=None, *, batch_size: int = 512,
-                 interleaved: bool = False,
-                 shard=None) -> Iterator[ReadBatch | PairBatch]:
+                 interleaved: bool = False, shard=None,
+                 chunk_bases: int | None = None,
+                 chunk_range=None) -> Iterator[ReadBatch | PairBatch]:
     """Unified entry point: one FASTQ -> ``ReadBatch``es, two FASTQs (or
     one interleaved) -> ``PairBatch``es.  The returned iterator plugs
     straight into ``repro.api.Aligner.stream_sam``, which dispatches on
-    the batch type."""
+    the batch type.  ``chunk_bases``/``chunk_range`` select bwa
+    ``-K``-style fixed-base chunk batches (see module docstring)."""
+    kw = dict(shard=shard, chunk_bases=chunk_bases, chunk_range=chunk_range)
     if path2 is not None or interleaved:
         return stream_pair_batches(path1, path2, batch_size,
-                                   interleaved=interleaved, shard=shard)
-    return stream_batches(path1, batch_size, shard=shard)
+                                   interleaved=interleaved, **kw)
+    return stream_batches(path1, batch_size, **kw)

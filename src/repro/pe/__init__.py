@@ -15,7 +15,8 @@ Entry points live on the pipeline: ``align_pairs_baseline`` /
 """
 
 from .. import obs
-from .pestat import PairStat, estimate_pestat, infer_dir  # noqa: F401
+from .pestat import (PairStat, estimate_pestat, infer_dir,  # noqa: F401
+                     pestat_from_jsonable, pestat_to_jsonable)
 from .rescue import (PEOptions, RescueTask, best_diag_seed,  # noqa: F401
                      merge_rescues, plan_rescues, rescue_window,
                      run_rescues_batched, run_rescues_scalar)
@@ -39,7 +40,10 @@ def pair_pipeline(idx, reads1, reads2, res1, res2, opt, peopt=None, *,
     peopt = peopt or PEOptions()
     p = opt.bsw
     with obs.span("pe_stat"):
-        pes = estimate_pestat(res1, res2, idx, max_ins=peopt.max_ins)
+        if peopt.frozen_pes is not None:
+            pes = list(peopt.frozen_pes)
+        else:
+            pes = estimate_pestat(res1, res2, idx, max_ins=peopt.max_ins)
     with obs.span("pe_rescue"):
         tasks = plan_rescues((res1, res2), (reads1, reads2), pes, idx, peopt)
         if batched:

@@ -39,6 +39,20 @@ class PairStat:
     failed: bool = True
 
 
+def pestat_to_jsonable(pes) -> list[dict]:
+    """PairStat[4] -> plain dicts (for job manifests / run logs).
+
+    JSON round-trips Python floats exactly (repr-based), so freezing an
+    estimate through a manifest cannot perturb downstream output.
+    """
+    return [dataclasses.asdict(s) for s in pes]
+
+
+def pestat_from_jsonable(rows) -> list[PairStat]:
+    """Inverse of :func:`pestat_to_jsonable`."""
+    return [PairStat(**row) for row in rows]
+
+
 def infer_dir(l_pac: int, b1: int, b2: int) -> tuple[int, int]:
     """bwa mem_infer_dir: (orientation r in 0..3, projected distance).
 

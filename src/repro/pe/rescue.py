@@ -115,6 +115,10 @@ class PEOptions:
     rescue_min_seed: int = 10        # window anchor seed (< SMEM's 19)
     min_score: int = 30              # emission threshold (bwa -T)
     mapq_blend: bool = True          # bwa's q_pe/q_se pair-aware MAPQ
+    # Pre-computed PairStat[4] (e.g. a memdist bootstrap estimate); when
+    # set, pair_pipeline skips per-batch estimation so output doesn't
+    # depend on which batch/shard saw which pairs.
+    frozen_pes: tuple | None = None
 
 
 def plan_rescues(results: tuple, reads: tuple, pes: list[PairStat],

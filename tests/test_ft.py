@@ -1,9 +1,12 @@
+import json
+import shutil
 import time
 
 import numpy as np
 import pytest
 
-from repro.ft import CheckpointManager, StragglerMonitor, plan_remesh
+from repro.ft import (CheckpointManager, ShardPlan, StragglerMonitor,
+                      plan_remesh, plan_shards)
 
 
 def _state(seed):
@@ -48,6 +51,56 @@ def test_checkpoint_corruption_falls_back(tmp_path):
     np.testing.assert_array_equal(got["params"]["w"], _state(1)["params"]["w"])
 
 
+def test_checkpoint_tmp_never_visible(tmp_path):
+    """An in-flight (or crashed) .tmp write is not a checkpoint: steps()
+    ignores it and restore() never reads it."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _state(1))
+    # simulate a crash mid-save of step 2: the tmp dir exists, the final
+    # dir does not (save() publishes via one atomic os.replace)
+    crashed = mgr.dir / "step_00000002.tmp"
+    shutil.copytree(mgr.dir / "step_00000001", crashed)
+    assert mgr.steps() == [1]
+    got, step = mgr.restore(_state(0))
+    assert step == 1
+    np.testing.assert_array_equal(got["params"]["w"], _state(1)["params"]["w"])
+
+
+def test_checkpoint_incomplete_dir_skipped(tmp_path):
+    """A checkpoint dir missing its MANIFEST.json (torn copy, partial
+    delete) is invisible to steps() and skipped on restore."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    (mgr.dir / "step_00000002" / "MANIFEST.json").unlink()
+    assert mgr.steps() == [1]
+    got, step = mgr.restore(_state(0))
+    assert step == 1
+
+
+def test_checkpoint_manifest_checksum_mismatch_rejected(tmp_path):
+    """A leaf whose bytes no longer match the manifest sha1 is rejected
+    (falls back to the older checkpoint; with none left, raises)."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _state(1))
+    d = mgr.dir / "step_00000001"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+    leaf = next(iter(manifest["leaves"].values()))
+    arr = np.load(d / leaf["file"])
+    np.save(d / leaf["file"], arr + 1)          # bytes now != sha1
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state(0))
+
+
+def test_checkpoint_gc_removes_old_dirs(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for i in range(1, 6):
+        mgr.save(i, _state(i))
+    assert mgr.steps() == [4, 5]
+    assert sorted(p.name for p in mgr.dir.glob("step_????????")) == \
+        ["step_00000004", "step_00000005"]
+
+
 def test_straggler_monitor_detects():
     mon = StragglerMonitor(window=16, threshold=1.5, persist=2)
     ev = None
@@ -73,3 +126,43 @@ def test_elastic_plan_node_loss():
 def test_elastic_plan_too_few_chips():
     with pytest.raises(ValueError):
         plan_remesh(8, model=16)
+
+
+# ---------------------------------------------------------------------
+# plan_shards — the alignment-shaped elastic entry point
+# ---------------------------------------------------------------------
+
+def test_plan_shards_contiguous_balanced():
+    plans = plan_shards(0, 3, 1000, n_chunks=8)
+    assert plans == [ShardPlan(0, 0, 3), ShardPlan(1, 3, 6),
+                     ShardPlan(2, 6, 8)]
+    # contiguous cover of every chunk exactly once, in order
+    assert plans[0].start == 0 and plans[-1].stop == 8
+    for a, b in zip(plans, plans[1:]):
+        assert a.stop == b.start
+    # balanced: sizes differ by at most one, big shards first
+    sizes = [p.n_chunks for p in plans]
+    assert max(sizes) - min(sizes) <= 1
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_plan_shards_more_workers_than_chunks():
+    plans = plan_shards(0, 8, 1000, n_chunks=3)
+    assert len(plans) == 3                      # no empty shards
+    assert [p.n_chunks for p in plans] == [1, 1, 1]
+
+
+def test_plan_shards_estimates_chunks_from_hint():
+    # 1000 reads x 101 bp ~ 101000 bases -> 11 chunks of 10000
+    plans = plan_shards(1000, 4, 10_000, read_len_hint=101)
+    assert plans[-1].stop == 11
+    assert len(plans) == 4
+
+
+def test_plan_shards_rejects_bad_args():
+    with pytest.raises(ValueError):
+        plan_shards(100, 0, 1000)
+    with pytest.raises(ValueError):
+        plan_shards(100, 2, 0)
+    with pytest.raises(ValueError):
+        plan_shards(-1, 2, 1000)

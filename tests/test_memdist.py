@@ -1,0 +1,381 @@
+"""Resilient multi-shard mem (repro.dist.run + io chunking + cli memdist).
+
+The load-bearing claim: a memdist run over N workers — including one
+whose shard is killed mid-run and auto-retried — produces a merged SAM
+byte-identical to an unsharded run with the same ``-K`` chunking, and a
+resumed shard demonstrably SKIPS completed chunks rather than redoing
+them (run-log chunk counters strictly resume).
+"""
+
+import io
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api import Aligner, AlignOptions
+from repro.core.contig import build_contig_index
+from repro.data import make_reference
+from repro.data.reads import simulate_pairs_multi, simulate_reads_multi
+from repro.dist.run import (FatalShardFailure, JobAbandoned, ShardFailure,
+                            StragglerRequeue, load_plan, plan_job, run_job)
+from repro.ft.straggler import StragglerEvent
+from repro.io.fastq import FastqRecord, write_fastq
+from repro.io.stream import check_chunking, open_batches, plan_chunks
+
+_B2S = {0: "A", 1: "C", 2: "G", 3: "T", 4: "N"}
+
+
+def _seq(row) -> str:
+    return "".join(_B2S[int(b)] for b in row)
+
+
+CONTIGS = [("chr1", make_reference(6000, seed=3)),
+           ("chr2", make_reference(4000, seed=4))]
+SE_CB = 1000        # 60 reads x 101bp -> 6 chunks: shards of 2/2/2
+PE_CB = 2400        # 48 pairs x 202bp -> 4 chunks: shards of 2/1/1
+
+
+@pytest.fixture(scope="module")
+def idx():
+    return build_contig_index(dict(CONTIGS))
+
+
+@pytest.fixture(scope="module")
+def se_fq(tmp_path_factory):
+    reads, _ = simulate_reads_multi(CONTIGS, 60, 101, seed=5)
+    p = tmp_path_factory.mktemp("memdist") / "se.fq"
+    write_fastq(p, [FastqRecord(f"r{i}", _seq(reads[i]), "I" * 101)
+                    for i in range(len(reads))])
+    return p
+
+
+@pytest.fixture(scope="module")
+def pe_fq(tmp_path_factory):
+    r1, r2, _ = simulate_pairs_multi(CONTIGS, 48, 101, seed=6,
+                                     insert_mean=300, insert_std=30,
+                                     burst_frac=0.1)
+    d = tmp_path_factory.mktemp("memdist_pe")
+    p1, p2 = d / "r1.fq", d / "r2.fq"
+    write_fastq(p1, [FastqRecord(f"p{i}/1", _seq(r1[i]), "I" * 101)
+                     for i in range(len(r1))])
+    write_fastq(p2, [FastqRecord(f"p{i}/2", _seq(r2[i]), "I" * 101)
+                     for i in range(len(r2))])
+    return p1, p2
+
+
+def _unsharded_se(idx, se_fq) -> str:
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    buf = io.StringIO()
+    al.stream_sam(open_batches(se_fq, chunk_bases=SE_CB), buf, cl=None)
+    return buf.getvalue()
+
+
+def _unsharded_pe(idx, pe_fq) -> str:
+    """mem -K --pe-bootstrap --no-pg: frozen leading-chunk insert stats."""
+    p1, p2 = pe_fq
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    lead = next(iter(open_batches(p1, p2, chunk_bases=PE_CB,
+                                  chunk_range=(0, 1))))
+    al.pe_stats = al.estimate_pe_stats(lead)
+    buf = io.StringIO()
+    al.stream_sam(open_batches(p1, p2, chunk_bases=PE_CB), buf, cl=None)
+    return buf.getvalue()
+
+
+@pytest.fixture(scope="module")
+def se_ref_sam(idx, se_fq):
+    return _unsharded_se(idx, se_fq)
+
+
+@pytest.fixture(scope="module")
+def pe_ref_sam(idx, pe_fq):
+    return _unsharded_pe(idx, pe_fq)
+
+
+# ---------------------------------------------------------------------
+# Fixed-base chunking (io/stream)
+# ---------------------------------------------------------------------
+
+def test_plan_chunks_matches_streamed_batches(se_fq):
+    plan = plan_chunks(se_fq, chunk_bases=SE_CB)
+    got = [(len(b.names), int(b.lens.sum()))
+           for b in open_batches(se_fq, chunk_bases=SE_CB)]
+    assert got == plan
+    assert len(plan) == 6
+    # every chunk except possibly the last carries >= chunk_bases bases
+    assert all(b >= SE_CB for _, b in plan[:-1])
+
+
+def test_chunk_range_is_a_window_of_the_same_decomposition(se_fq):
+    full = list(open_batches(se_fq, chunk_bases=SE_CB))
+    window = list(open_batches(se_fq, chunk_bases=SE_CB,
+                               chunk_range=(2, 5)))
+    assert [b.names for b in window] == [b.names for b in full[2:5]]
+
+
+def test_chunked_shards_cover_input_in_order(se_fq):
+    """Concatenating contiguous chunk-range shards IS the unsharded
+    order — the invariant the deterministic merge rests on."""
+    full = [n for b in open_batches(se_fq, chunk_bases=SE_CB)
+            for n in b.names]
+    pieces = []
+    for lo, hi in ((0, 3), (3, 5), (5, 6)):
+        pieces += [n for b in open_batches(se_fq, chunk_bases=SE_CB,
+                                           chunk_range=(lo, hi))
+                   for n in b.names]
+    assert pieces == full
+
+
+def test_pair_chunks_count_both_ends_and_never_split_pairs(pe_fq):
+    p1, p2 = pe_fq
+    plan = plan_chunks(p1, p2, chunk_bases=PE_CB)
+    assert len(plan) == 4
+    batches = list(open_batches(p1, p2, chunk_bases=PE_CB))
+    for (n_reads, n_bases), b in zip(plan, batches):
+        assert n_reads == 2 * len(b.names)          # both ends counted
+        assert n_bases == int(b.lens1.sum() + b.lens2.sum())
+
+
+def test_check_chunking_validation():
+    assert check_chunking(None, None) == (None, None)
+    assert check_chunking(100, (1, 3)) == (100, (1, 3))
+    with pytest.raises(ValueError):
+        check_chunking(None, (0, 2))        # range without chunk_bases
+    with pytest.raises(ValueError):
+        check_chunking(0, None)
+    with pytest.raises(ValueError):
+        check_chunking(100, (3, 1))
+
+
+# ---------------------------------------------------------------------
+# The resilient driver
+# ---------------------------------------------------------------------
+
+def test_memdist_se_byte_identical_across_worker_counts(
+        idx, se_fq, se_ref_sam, tmp_path):
+    for workers in (1, 3):
+        al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+        out = tmp_path / f"w{workers}.sam"
+        summ = run_job(al, se_fq, out=out, workdir=tmp_path / f"wd{workers}",
+                       workers=workers, chunk_bases=SE_CB, cl=None)
+        assert out.read_text() == se_ref_sam
+        assert summ["retries"] == 0
+        assert not (tmp_path / f"wd{workers}").exists()   # cleaned up
+
+
+def test_memdist_injected_kill_retries_and_stays_identical(
+        idx, se_fq, se_ref_sam, tmp_path):
+    """One shard killed mid-run: auto-retry resumes from its checkpoint,
+    the merged SAM is still byte-identical, the run log shows exactly one
+    shard_retry, and the retried shard's chunk counters strictly RESUME
+    (no completed chunk is re-aligned)."""
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    rl_path = tmp_path / "run.jsonl"
+    out = tmp_path / "merged.sam"
+    with obs.RunLog(rl_path) as rl:
+        summ = run_job(al, se_fq, out=out, workdir=tmp_path / "wd",
+                       workers=3, chunk_bases=SE_CB, cl=None, runlog=rl,
+                       retry_backoff_s=0.0,
+                       inject=_once_injector(shard=1, chunk=1))
+    assert out.read_text() == se_ref_sam
+    assert summ["retries"] == 1
+    evs = obs.read_runlog(rl_path)
+    retries = [e for e in evs if e["event"] == "shard_retry"]
+    assert len(retries) == 1
+    assert retries[0]["shard"] == 1 and retries[0]["reason"] == "failure"
+    assert retries[0]["replan"]                 # elastic re-plan logged
+    # the retried shard's second shard_start resumed past chunk 0
+    starts = [e for e in evs
+              if e["event"] == "shard_start" and e["shard"] == 1]
+    assert [e["resumed"] for e in starts] == [False, True]
+    assert starts[1]["chunks_done"] >= 1
+    # chunk counters strictly resume: each local chunk aligned once
+    done = [e["local_chunk"] for e in evs
+            if e["event"] == "shard_batch" and e["shard"] == 1]
+    assert done == sorted(done) and len(done) == len(set(done))
+
+
+def _once_injector(*, shard: int, chunk: int, fatal: bool = False):
+    fired = []
+
+    def inject(s, c):
+        if s == shard and c == chunk and not fired:
+            fired.append(True)
+            raise (FatalShardFailure if fatal else ShardFailure)(
+                f"injected kill: shard {s} chunk {c}")
+
+    return inject
+
+
+def test_memdist_pe_bootstrap_byte_identical_with_retry(
+        idx, pe_fq, pe_ref_sam, tmp_path):
+    """PE across a multi-contig reference: frozen leading-chunk insert
+    stats make the sharded run byte-identical to `mem -K --pe-bootstrap`
+    even with an injected shard kill."""
+    p1, p2 = pe_fq
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    out = tmp_path / "pe.sam"
+    summ = run_job(al, p1, p2, out=out, workdir=tmp_path / "wd",
+                   workers=3, chunk_bases=PE_CB, cl=None,
+                   retry_backoff_s=0.0,
+                   inject=_once_injector(shard=0, chunk=1))
+    assert out.read_text() == pe_ref_sam
+    assert summ["retries"] == 1
+    assert al.pe_stats is not None              # frozen from the plan
+
+
+def test_memdist_fatal_kill_then_fresh_run_resumes(
+        idx, se_fq, se_ref_sam, tmp_path):
+    """A fatal kill propagates (no merged output); a FRESH run_job over
+    the same workdir restores every shard's checkpoint, skips completed
+    chunks, and merges byte-identically."""
+    wd, out = tmp_path / "wd", tmp_path / "out.sam"
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    with pytest.raises(FatalShardFailure):
+        run_job(al, se_fq, out=out, workdir=wd, workers=3,
+                chunk_bases=SE_CB, cl=None, retry_backoff_s=0.0,
+                inject=_once_injector(shard=0, chunk=1, fatal=True))
+    assert not out.exists()
+    assert (wd / "plan.json").exists()          # durable job state
+    rl_path = tmp_path / "resume.jsonl"
+    al2 = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    with obs.RunLog(rl_path) as rl:
+        summ = run_job(al2, se_fq, out=out, workdir=wd, workers=3,
+                       chunk_bases=SE_CB, cl=None, runlog=rl,
+                       retry_backoff_s=0.0)
+    assert out.read_text() == se_ref_sam
+    assert summ["resumed"]
+    evs = obs.read_runlog(rl_path)
+    # shard 0 completed chunk 0 before the kill; the resumed run must
+    # START at local chunk >= 1, not re-align chunk 0
+    s0 = [e for e in evs if e["event"] == "shard_batch" and e["shard"] == 0]
+    assert s0 and min(e["local_chunk"] for e in s0) >= 1
+    starts = [e for e in evs
+              if e["event"] == "shard_start" and e["shard"] == 0]
+    assert starts[0]["resumed"] and starts[0]["chunks_done"] >= 1
+
+
+def test_memdist_straggler_requeue(idx, se_fq, se_ref_sam, tmp_path):
+    """A monitor demanding action="checkpoint" requeues the shard's
+    remainder; the retried shard resumes and output is unchanged."""
+    class DemandRequeue:
+        def __init__(self):
+            self.fired = False
+
+        def observe(self, step, host=0, step_time=0.0):
+            if host == 0 and not self.fired:
+                self.fired = True
+                return StragglerEvent(step=step, host=host,
+                                      step_time=step_time, median=1e-9,
+                                      action="checkpoint")
+            return None
+
+    rl_path = tmp_path / "run.jsonl"
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    out = tmp_path / "out.sam"
+    with obs.RunLog(rl_path) as rl:
+        summ = run_job(al, se_fq, out=out, workdir=tmp_path / "wd",
+                       workers=3, chunk_bases=SE_CB, cl=None, runlog=rl,
+                       retry_backoff_s=0.0, monitor=DemandRequeue())
+    assert out.read_text() == se_ref_sam
+    assert summ["retries"] == 1
+    retries = [e for e in obs.read_runlog(rl_path)
+               if e["event"] == "shard_retry"]
+    assert len(retries) == 1 and retries[0]["reason"] == "straggler"
+
+
+def test_memdist_retry_cap_abandons(idx, se_fq, tmp_path):
+    """A shard that keeps dying is abandoned after max_retries; the run
+    log records shard_abandoned and no merged output appears."""
+    def always_kill(shard, chunk):
+        if shard == 1:
+            raise ShardFailure("flaky forever")
+
+    rl_path = tmp_path / "run.jsonl"
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    out = tmp_path / "out.sam"
+    with obs.RunLog(rl_path) as rl:
+        with pytest.raises(JobAbandoned):
+            run_job(al, se_fq, out=out, workdir=tmp_path / "wd",
+                    workers=3, chunk_bases=SE_CB, cl=None, runlog=rl,
+                    max_retries=2, retry_backoff_s=0.0,
+                    inject=always_kill)
+    assert not out.exists()
+    evs = obs.read_runlog(rl_path)
+    assert sum(e["event"] == "shard_retry" for e in evs) == 2
+    abandoned = [e for e in evs if e["event"] == "shard_abandoned"]
+    assert len(abandoned) == 1 and abandoned[0]["shard"] == 1
+
+
+def test_memdist_plan_tamper_and_input_mismatch_rejected(
+        idx, se_fq, tmp_path):
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    wd = tmp_path / "wd"
+    with pytest.raises(FatalShardFailure):
+        run_job(al, se_fq, workdir=wd, out=tmp_path / "o.sam", workers=3,
+                chunk_bases=SE_CB, cl=None, retry_backoff_s=0.0,
+                inject=_once_injector(shard=0, chunk=0, fatal=True))
+    plan_path = wd / "plan.json"
+    # 1) tampered manifest: checksum mismatch
+    d = json.loads(plan_path.read_text())
+    d["chunk_bases"] = 999
+    plan_path.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="checksum"):
+        load_plan(plan_path)
+    # 2) valid manifest for DIFFERENT inputs: resume refused
+    fresh = plan_job(al, se_fq, chunk_bases=2 * SE_CB, workers=3)
+    plan_path.write_text(json.dumps(fresh.to_jsonable()))
+    with pytest.raises(ValueError, match="does not match"):
+        run_job(al, se_fq, workdir=wd, out=tmp_path / "o.sam", workers=3,
+                chunk_bases=SE_CB, cl=None)
+
+
+def test_memdist_pg_header_records_plan(idx, se_fq, tmp_path):
+    al = Aligner.from_index(idx, AlignOptions(engine="batched"))
+    out = tmp_path / "out.sam"
+    run_job(al, se_fq, out=out, workdir=tmp_path / "wd", workers=2,
+            chunk_bases=SE_CB, cl=f"repro.cli memdist -K {SE_CB} -n 2")
+    head = [ln for ln in out.read_text().splitlines()
+            if ln.startswith("@")]
+    pg = [ln for ln in head if ln.startswith("@PG")]
+    assert len(pg) == 1 and f"-K {SE_CB}" in pg[0]
+
+
+# ---------------------------------------------------------------------
+# Satellite: read_shard fallback narrowing
+# ---------------------------------------------------------------------
+
+def test_read_shard_backend_fallback_warns(monkeypatch):
+    from repro.dist import api as dist_api
+
+    def boom():
+        raise RuntimeError("backend not initialized")
+
+    monkeypatch.setattr(dist_api.jax, "process_count", boom)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert dist_api.read_shard() == (0, 1)
+    assert any(issubclass(x.category, RuntimeWarning) for x in w)
+
+
+def test_read_shard_other_errors_propagate(monkeypatch):
+    from repro.dist import api as dist_api
+
+    def boom():
+        raise OSError("mis-configured coordinator")
+
+    monkeypatch.setattr(dist_api.jax, "process_count", boom)
+    with pytest.raises(OSError):
+        dist_api.read_shard()
+
+
+def test_read_shard_explicit_spec_still_wins(monkeypatch):
+    from repro.dist import api as dist_api
+    monkeypatch.setattr(
+        dist_api.jax, "process_count",
+        lambda: (_ for _ in ()).throw(RuntimeError("nope")))
+    assert dist_api.read_shard("2/5") == (2, 5)
