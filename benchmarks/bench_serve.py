@@ -1,0 +1,202 @@
+"""Load benchmark for the always-on alignment service (``repro.serve``).
+
+Three questions, three row groups:
+
+* **Conformance under load** — concurrent SE/PE clients against one
+  server; every response must be byte-identical to an offline
+  ``Aligner.stream_sam`` run (``serve/identity_ok``, gated exact).
+* **Coalescing** — a deterministic pause/resume window proves N queued
+  requests ran as ONE engine batch (``serve/coalesced_*``, gated exact),
+  then wall-clock for coalesced vs one-batch-per-request dispatch of the
+  same work (``serve/coalesce_speedup`` — the continuous-batching win).
+* **Latency** — requests/s and p50/p99 under concurrency (``_s`` rows,
+  machine-varying, noted-not-gated).
+"""
+
+from __future__ import annotations
+
+import io
+import threading
+import time
+
+from .common import row, scaled, get_world
+
+from repro.api import Aligner  # noqa: E402
+from repro.data import decode, simulate_pairs  # noqa: E402
+from repro.io.stream import _pack_pe, _pack_se  # noqa: E402
+from repro.serve import AlignmentServer, ServeClient  # noqa: E402
+
+N_PARTS = scaled(16, 6)          # distinct request payloads in the pool
+READS_PER_REQ = scaled(16, 4)
+CLIENTS = scaled(8, 4)
+REQS_PER_CLIENT = scaled(8, 3)
+COALESCE_REQS = scaled(8, 4)     # requests per deterministic window
+
+
+def _offline_se(idx, part):
+    al = Aligner(idx)
+    buf = io.StringIO()
+    al.stream_sam([_pack_se([n for n, _ in part], [s for _, s in part])],
+                  buf, header=False)
+    return buf.getvalue().splitlines()
+
+
+def _offline_pe(idx, part):
+    al = Aligner(idx)
+    buf = io.StringIO()
+    al.stream_sam([_pack_pe([n for n, _, _ in part],
+                            [a for _, a, _ in part],
+                            [b for _, _, b in part])],
+                  buf, header=False)
+    return buf.getvalue().splitlines()
+
+
+def _drive(srv, parts, want, n_clients, reqs_per_client):
+    """Fire concurrent clients over a payload pool; return per-request
+    latencies and whether every response matched its offline bytes."""
+    lat: list[float] = []
+    lat_lock = threading.Lock()
+    bad = []
+
+    def client(ci):
+        with ServeClient.connect(*srv.address) as c:
+            for k in range(reqs_per_client):
+                pi = (ci + k) % len(parts)
+                t0 = time.perf_counter()
+                if isinstance(parts[pi][0], tuple) and len(parts[pi][0]) == 3:
+                    res = c.align_pairs(parts[pi])
+                else:
+                    res = c.align(parts[pi])
+                dt = time.perf_counter() - t0
+                with lat_lock:
+                    lat.append(dt)
+                    if res.sam != want[pi]:
+                        bad.append((ci, k, pi))
+
+    threads = [threading.Thread(target=client, args=(ci,))
+               for ci in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return lat, wall, not bad
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _coalesce_window(srv, parts):
+    """Deterministically coalesce len(parts) requests into one batch;
+    return (wall_s, requests_in_batch, batches_run)."""
+    b0 = srv.live_stats().get("serve_batches", 0)
+    r0 = srv.live_stats().get("serve_requests", 0)
+    srv.pause()
+    results = [None] * len(parts)
+
+    def fire(i):
+        with ServeClient.connect(*srv.address) as c:
+            results[i] = c.align(parts[i])
+
+    threads = [threading.Thread(target=fire, args=(i,))
+               for i in range(len(parts))]
+    for t in threads:
+        t.start()
+    deadline = time.time() + 10
+    while (srv.live_stats().get("serve_requests", 0) - r0 < len(parts)
+           and time.time() < deadline):
+        time.sleep(0.005)
+    time.sleep(0.1)                      # let in-flight puts settle
+    t0 = time.perf_counter()
+    srv.resume()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    snap = srv.live_stats()
+    return wall, snap.get("serve_requests", 0) - r0, \
+        snap.get("serve_batches", 0) - b0, results
+
+
+def run() -> None:
+    idx, reads, _ = get_world()
+    pool = [decode(r) for r in reads]
+    se_parts = []
+    for p in range(N_PARTS):
+        part = [(f"b{p}_r{j}", pool[(p * READS_PER_REQ + j) % len(pool)])
+                for j in range(READS_PER_REQ)]
+        se_parts.append(part)
+    want_se = [_offline_se(idx, part) for part in se_parts]
+
+    srv = AlignmentServer(idx, max_batch_reads=4096, max_queue=256)
+    srv.start()
+    try:
+        # warm the engine (jit compile outside the timed region)
+        with ServeClient.connect(*srv.address) as c:
+            c.align(se_parts[0])
+
+        # ---- concurrent SE load ----
+        lat, wall, ok = _drive(srv, se_parts, want_se,
+                               CLIENTS, REQS_PER_CLIENT)
+        n = len(lat)
+        row("serve/identity_ok", int(ok),
+            f"{n} concurrent responses vs offline stream_sam")
+        row("serve/requests_per_s", round(n / wall, 2),
+            f"{CLIENTS} clients x {REQS_PER_CLIENT} reqs x "
+            f"{READS_PER_REQ} reads")
+        row("serve/p50_s", round(_pct(lat, 0.50), 4))
+        row("serve/p99_s", round(_pct(lat, 0.99), 4))
+
+        # ---- deterministic coalescing window ----
+        parts = se_parts[:COALESCE_REQS]
+        _coalesce_window(srv, parts)     # warm the coalesced batch shape
+        t_coal, got_reqs, got_batches, results = _coalesce_window(srv, parts)
+        coal_ok = all(res is not None and res.sam == want_se[i]
+                      for i, res in enumerate(results))
+        row("serve/coalesced_requests", got_reqs,
+            "requests captured in one pause window")
+        row("serve/coalesced_batches", got_batches,
+            "engine batches they ran as")
+        row("serve/coalesced_identity_ok", int(coal_ok),
+            "coalesced responses vs offline bytes")
+
+        # ---- one-batch-per-request dispatch of the same work ----
+        with ServeClient.connect(*srv.address) as c:
+            t0 = time.perf_counter()
+            for part in parts:
+                c.align(part)
+            t_seq = time.perf_counter() - t0
+        row("serve/one_batch_per_request_s", round(t_seq, 4),
+            f"{len(parts)} sequential requests")
+        row("serve/coalesced_window_s", round(t_coal, 4),
+            f"same {len(parts)} requests, one batch")
+        row("serve/coalesce_speedup", round(t_seq / t_coal, 2),
+            "continuous batching vs per-request dispatch")
+    finally:
+        srv.shutdown()
+
+    # ---- PE identity through a fresh server (own pestat => own batch) --
+    from repro.data import make_reference
+    ref = make_reference(scaled(120_000, 30_000), seed=42)
+    r1, r2, _ = simulate_pairs(ref, scaled(64, 16), 101,
+                               insert_mean=300, insert_std=30, seed=21)
+    from repro.core import fmindex as fmx
+    pidx = fmx.build_index(ref)
+    pe_part = [(f"p{i}", decode(a), decode(b))
+               for i, (a, b) in enumerate(zip(r1, r2))]
+    want_pe = _offline_pe(pidx, pe_part)
+    psrv = AlignmentServer(pidx)
+    psrv.start()
+    try:
+        with ServeClient.connect(*psrv.address) as c:
+            res = c.align_pairs(pe_part)
+        row("serve/pe_identity_ok", int(res.sam == want_pe),
+            f"{len(pe_part)} pairs vs offline stream_sam")
+    finally:
+        psrv.shutdown()
+
+
+if __name__ == "__main__":
+    run()

@@ -30,7 +30,8 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="smem,sal,bsw,e2e,scaling,pe,io,dist")
+    ap.add_argument("--only",
+                    default="smem,sal,bsw,e2e,scaling,pe,io,dist,serve")
     ap.add_argument("--ci", action="store_true",
                     help="CI-smoke sizes for every suite")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -82,7 +83,7 @@ def main() -> None:
 
 def _run_suites(args, picks, runlog) -> None:
     from . import common, bench_smem, bench_sal, bench_bsw, bench_e2e, \
-        bench_scaling, bench_pe, bench_io, bench_dist
+        bench_scaling, bench_pe, bench_io, bench_dist, bench_serve
     suites = {
         "smem": ("Table 4 (SMEM kernel)", bench_smem.run),
         "sal": ("Table 5 (SAL kernel)", bench_sal.run),
@@ -93,6 +94,8 @@ def _run_suites(args, picks, runlog) -> None:
         "io": ("I/O subsystem (ingestion + index bundle)", bench_io.run),
         "dist": ("Resilient memdist (merge + recovery overhead)",
                  bench_dist.run),
+        "serve": ("Always-on service (continuous batching)",
+                  bench_serve.run),
     }
     warn_ctx = (runlog.capture_warnings() if runlog is not None
                 else contextlib.nullcontext())

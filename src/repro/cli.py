@@ -1,6 +1,6 @@
 """bwa-mem-shaped command-line front-end over the ``Aligner`` facade.
 
-Two subcommands, mirroring the tool the paper accelerates::
+Subcommands, mirroring (and extending) the tool the paper accelerates::
 
     python -m repro.cli index ref.fa[.gz] [-p PREFIX]
     python -m repro.cli mem  ref.fa reads_1.fq[.gz] [reads_2.fq[.gz]]
@@ -9,12 +9,17 @@ Two subcommands, mirroring the tool the paper accelerates::
                              [--shard i/n] [--engine baseline|batched]
                              [--profile prof.json] [--trace trace.json]
                              [--runlog run.jsonl] [--live PREFIX]
-                             [-k -w -r -c -A -B -O -E -L -d -T -U]
+                             [-k -w -r -c -A -B -O -E -L -d -T -U -a -Y]
                              [-R '@RG\\tID:...']
     python -m repro.cli memdist ref.fa reads_1.fq [reads_2.fq]
                              [-o out.sam] [-n WORKERS] [-K BASES]
                              [--workdir DIR] [--max-retries N]
                              [--runlog run.jsonl] [--no-pg] [...mem flags]
+    python -m repro.cli serve ref.fa [--host H] [--port P]
+                             [--max-batch-reads N] [--max-queue N]
+                             [--max-read-len BP] [--ready-file PATH]
+                             [--runlog run.jsonl] [--live PREFIX]
+                             [...mem alignment flags]
     python -m repro.cli report prof.json              # one profile
     python -m repro.cli report --merge 'shard*.json'  # cross-shard merge
 
@@ -41,6 +46,14 @@ the per-shard SAMs merge deterministically — byte-identical to
 ``mem -K <same> --pe-bootstrap`` on the same input (compare with
 ``--no-pg``, since ``@PG`` records each invocation).  Fault injection
 for drills: ``REPRO_FT_INJECT="shard:chunk[:fail|fatal]"``.
+
+``serve`` starts the always-on alignment service (``repro.serve``): the
+index is loaded ONCE, client requests (length-prefixed JSON over TCP —
+see ``repro.serve.client``) queue into a bounded buffer, and a scheduler
+coalesces compatible requests into full-width padded engine batches.
+Responses stream each request's SAM records byte-identical to an offline
+``mem`` run over the same reads and options.  Ctrl-C drains queued
+requests before exiting.
 
 ``--profile out.json`` turns on ``repro.obs`` telemetry and writes the
 paper-style kernel-breakdown profile; ``--trace out.trace.json``
@@ -317,6 +330,60 @@ def cmd_memdist(args, argv) -> int:
     return 0
 
 
+def cmd_serve(args, argv) -> int:
+    from .serve import AlignmentServer
+
+    try:
+        options = _options_from_args(args)
+    except ValueError as e:
+        _log(f"error: {e}")
+        return 2
+    try:
+        from .api import get_engine
+        get_engine(options.engine)        # fail fast on a bad --engine
+    except ValueError as e:
+        _log(f"error: {e}")
+        return 2
+    index = _load_or_build(args.ref)
+    runlog = exporter = None
+    if args.runlog not in (None, "off", "-"):
+        from . import obs
+        runlog = obs.RunLog(args.runlog)
+        runlog.manifest("repro.cli serve", argv=argv,
+                        engine=options.engine, options=options, index=index)
+        _log(f"run {runlog.run_id}: logging events to {args.runlog}")
+    if args.live not in (None, "off", "-"):
+        from . import obs
+        exporter = obs.LiveExporter(
+            args.live, interval=args.live_interval,
+            meta={"run": runlog.run_id if runlog else "",
+                  "engine": options.engine, "source": "repro.cli serve"})
+        _log(f"live metrics at {exporter.json_path} + {exporter.prom_path} "
+             f"(every {args.live_interval:g}s)")
+    server = AlignmentServer(index, options,
+                             host=args.host, port=args.port,
+                             max_batch_reads=args.max_batch_reads,
+                             max_queue=args.max_queue,
+                             max_read_len=args.max_read_len,
+                             runlog=runlog, exporter=exporter)
+    host, port = server.start()
+    _log(f"serving on {host}:{port} (engine={options.engine}, "
+         f"max_batch_reads={args.max_batch_reads}, "
+         f"max_queue={args.max_queue})")
+    if args.ready_file:
+        with open(args.ready_file, "w") as f:
+            f.write(f"{host} {port}\n")
+        _log(f"wrote address to {args.ready_file}")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        _log("shutting down (draining queued requests)")
+    finally:
+        server.shutdown(drain=True)
+    return 0
+
+
 def cmd_report(args, argv) -> int:
     import glob as _glob
     from . import obs
@@ -405,6 +472,12 @@ def _add_align_flags(p) -> None:
                    help="minimum output alignment score [30]")
     p.add_argument("-U", type=int, default=None, metavar="INT",
                    help="unpaired read-pair penalty [17]")
+    p.add_argument("-a", action="store_true", default=None,
+                   help="output all alignments for SE reads (secondary "
+                        "0x100 records; MAPQ 0)")
+    p.add_argument("-Y", action="store_true", default=None,
+                   help="use soft clipping for supplementary alignments "
+                        "(default: hard clipping)")
     p.add_argument("-R", "--read-group", default=None, metavar="STR",
                    help=r"read group header line, e.g. '@RG\tID:sample' "
                         "(emits the @RG header and an RG:Z: tag on every "
@@ -501,6 +574,49 @@ def build_parser() -> argparse.ArgumentParser:
                          "'off' disables")
     _add_align_flags(md)
     md.set_defaults(fn=cmd_memdist, chunk_bases=100_000)
+
+    sv = sub.add_parser(
+        "serve",
+        help="persistent alignment server: index loaded once, queued "
+             "client requests coalesced into full-width engine batches "
+             "(see repro.serve)")
+    sv.add_argument("ref", help="index bundle prefix (or FASTA to build "
+                                "in-memory)")
+    sv.add_argument("--host", default="127.0.0.1",
+                    help="bind address [127.0.0.1]")
+    sv.add_argument("--port", type=int, default=0,
+                    help="TCP port; 0 picks a free one (printed, and "
+                         "written to --ready-file) [0]")
+    sv.add_argument("--max-batch-reads", type=int, default=512,
+                    metavar="N",
+                    help="read budget of one coalesced engine batch "
+                         "(throughput knob: larger batches saturate the "
+                         "kernels, at some per-request latency) [512]")
+    sv.add_argument("--max-queue", type=int, default=64, metavar="N",
+                    help="bounded request queue; a full queue returns "
+                         "structured 'overloaded' errors (backpressure) "
+                         "[64]")
+    sv.add_argument("--max-read-len", type=int, default=4096,
+                    metavar="BP",
+                    help="reject reads above BP with 'read_too_long' "
+                         "(one huge read would poison its cohort's "
+                         "padding) [4096]")
+    sv.add_argument("--ready-file", default=None, metavar="PATH",
+                    help="write 'host port' here once listening (for "
+                         "scripts/CI that need the picked port)")
+    sv.add_argument("--runlog", default=None, metavar="JSONL",
+                    help="structured run-log path (request, "
+                         "batch_coalesced, request_done/request_error "
+                         "events); 'off' disables")
+    sv.add_argument("--live", default=None, metavar="PREFIX",
+                    help="live metrics export: atomically rewrite "
+                         "PREFIX.json + PREFIX.prom (Prometheus "
+                         "textfile) while serving; 'off' disables")
+    sv.add_argument("--live-interval", type=float, default=1.0,
+                    metavar="SECS",
+                    help="live-export rewrite interval [1.0]")
+    _add_align_flags(sv)
+    sv.set_defaults(fn=cmd_serve)
 
     rp = sub.add_parser("report", help="pretty-print saved --profile "
                                        "JSON(s); multiple files (or globs) "

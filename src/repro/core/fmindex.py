@@ -36,6 +36,7 @@ Index convention (0-based, self-contained — see DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import NamedTuple
 
 import numpy as np
@@ -50,6 +51,9 @@ BASE_ETA = 128    # original BWA-MEM bucket size (2-bit packed)
 SA_SAMPLE = 32    # suffix-array sampling of the baseline compressed SA
 
 I32 = jnp.int32
+
+#: Serializes FMIndex.device() lazy builds (see that method).
+_DEVICE_LOCK = threading.Lock()
 
 
 def revcomp(codes: np.ndarray) -> np.ndarray:
@@ -174,7 +178,14 @@ class FMIndex:
         return ((int(self.sa_sampled[j // SA_SAMPLE]) + t) % self.N, t)
 
     def device(self) -> FMArrays:
-        if self._device is None:
+        if self._device is not None:
+            return self._device
+        # one lock for all indexes: the build is rare (once per index)
+        # and concurrent aligner calls sharing one index (repro.serve)
+        # must not duplicate the host->device transfer
+        with _DEVICE_LOCK:
+            if self._device is not None:
+                return self._device
             self._device = FMArrays(
                 occ32_counts=jnp.asarray(self.occ32_counts, dtype=I32),
                 occ32_bytes=jnp.asarray(self.occ32_bytes),

@@ -53,6 +53,8 @@ class Alignment:
     seedcov: int; seedlen0: int
     sub: int = 0; csub: int = 0
     secondary: int = -1
+    supplementary: bool = False   # non-first primary region (SAM 0x800)
+    hard_clip: bool = False       # emit clips as H (supplementary w/o -Y)
     rescued: bool = False     # placed by PE mate rescue, not by seeding
     frac_rep: float = 0.0     # read's repeat fraction (bwa frac_rep; the
                               # PE MAPQ blend scales q_pe by it)
@@ -325,7 +327,9 @@ def mark_and_finalize(alns: list[Alignment], query: np.ndarray,
                       S: np.ndarray, l_pac: int, p: BSWParams,
                       min_seed_len: int,
                       frep: float = 0.0,
-                      min_score: int = 30) -> list[Alignment]:
+                      min_score: int = 30,
+                      all_hits: bool = False,
+                      softclip_supp: bool = False) -> list[Alignment]:
     if not alns:
         return []
     alns = sorted(alns, key=lambda a: (-a.score, a.qb, a.rb))
@@ -347,14 +351,23 @@ def mark_and_finalize(alns: list[Alignment], query: np.ndarray,
                         break
         if not placed:
             z.append(i)
-    # bwa -a semantics: report every region with truesc >= T (default 30)
+    # Emission (bwa mem_reg2sam): primaries above -T always; secondaries
+    # only under -a (flag 0x100, MAPQ 0); non-first primaries are
+    # supplementary (flag 0x800) and hard-clipped unless -Y.
     out = []
+    n_primary = 0
     for a in alns:
         if a.truesc < min_score:
+            continue
+        if a.secondary >= 0 and not all_hits:
             continue
         finalize_alignment(a, query, S, l_pac, p)
         a.mapq = approx_mapq(a, p, min_seed_len) if a.secondary < 0 else 0
         a.frac_rep = frep      # per-read, carried on every region like bwa
+        if a.secondary < 0:
+            a.supplementary = n_primary > 0
+            a.hard_clip = a.supplementary and not softclip_supp
+            n_primary += 1
         out.append(a)
     return out
 
@@ -427,6 +440,8 @@ class PipelineOptions:
     bsw_block: int = 256
     bsw_sort: bool = True
     min_score: int = 30             # emission threshold (bwa -T)
+    all_hits: bool = False          # bwa -a: also emit secondary records
+    softclip_supp: bool = False     # bwa -Y: soft-clip supplementary
     # Kernel backends for the batched driver's hot stages.  The defaults
     # reproduce the historic behavior (pure numpy/jnp lockstep); the
     # "pallas" engine flips both to route through the Pallas kernels.
@@ -517,7 +532,9 @@ def run_se_baseline(idx: FMIndex, reads: np.ndarray,
         with obs.span("finalize"):
             results.append(mark_and_finalize(alns, q, S, l_pac, opt.bsw,
                                              opt.mem.min_seed_len, frep=frep,
-                                             min_score=opt.min_score))
+                                             min_score=opt.min_score,
+                                             all_hits=opt.all_hits,
+                                             softclip_supp=opt.softclip_supp))
     return results, stats
 
 
@@ -566,7 +583,9 @@ def run_se_batched(idx: FMIndex, reads: np.ndarray,
             results.append(mark_and_finalize(alns, reads[r], S, l_pac,
                                              opt.bsw, opt.mem.min_seed_len,
                                              frep=frep,
-                                             min_score=opt.min_score))
+                                             min_score=opt.min_score,
+                                             all_hits=opt.all_hits,
+                                             softclip_supp=opt.softclip_supp))
     stats = obs.Snapshot(sa_lookups=n_lookups, bsw_tasks=execu.stats["tasks"],
                          cells_useful=execu.stats["cells_useful"],
                          cells_total=execu.stats["cells_total"])

@@ -90,15 +90,20 @@ def global_align_cigar(q: np.ndarray, t: np.ndarray, w: int,
     return int(H[n, m]), cigar
 
 
-def _cigar_str(read: np.ndarray, aln) -> str:
-    """CIGAR with soft clips from the alignment's query interval."""
+def _cigar_str(read: np.ndarray, aln, hard_clip: bool = False) -> str:
+    """CIGAR with clips from the alignment's query interval.
+
+    Clips are soft (``S``) except for supplementary records without
+    ``-Y``, which bwa hard-clips (``H``).
+    """
+    clip = "H" if hard_clip else "S"
     cig = ""
     if aln.qb > 0:
-        cig += f"{aln.qb}S"
+        cig += f"{aln.qb}{clip}"
     cig += "".join(f"{n}{op}" for n, op in aln.cigar)
     tail = len(read) - aln.qe
     if tail > 0:
-        cig += f"{tail}S"
+        cig += f"{tail}{clip}"
     return cig
 
 
@@ -117,10 +122,12 @@ def format_sam(qname: str, read: np.ndarray, aln, idx=None) -> str:
         return f"{qname}\t4\t*\t0\t0\t*\t*\t0\t0\t*\t*"
     flag = 16 if aln.is_rev else 0
     if aln.secondary >= 0:
-        flag |= 256
+        flag |= 0x100
+    if getattr(aln, "supplementary", False):
+        flag |= 0x800
     rname, pos = (DEFAULT_RNAME, aln.pos) if idx is None \
         else translate(idx, aln.pos)
-    cig = _cigar_str(read, aln)
+    cig = _cigar_str(read, aln, hard_clip=getattr(aln, "hard_clip", False))
     return (f"{qname}\t{flag}\t{rname}\t{pos + 1}\t{aln.mapq}\t{cig}\t*\t0\t0"
             f"\t*\t*\tAS:i:{aln.score}\tNM:i:{aln.nm}")
 

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 
 import jax
@@ -96,19 +97,30 @@ def sweep_occ_configs(idx, interpret: bool | None = None) -> OccConfig:
     return OccConfig(layout, qb, itp, tuple(timings))
 
 
+#: Serializes the attach-time sweep: concurrent aligner calls sharing one
+#: index (repro.serve) must not race the cache probe/sweep/store below.
+_ATTACH_LOCK = threading.Lock()
+
+
 def attach_occ_config(idx, interpret: bool | None = None) -> OccConfig:
     """Sweep once per (index, interpret-mode) and cache on the index.
 
     Subsequent pipeline runs (and ``core.pipeline.occ_fn_for``) reuse the
     cached config, so the sweep cost is paid at attach time only.
+    Thread-safe: the probe-sweep-store sequence is serialized so N
+    concurrent callers run (and time) the sweep exactly once.
     """
     itp = resolve_interpret(interpret)
     cfg = getattr(idx, "_pallas_occ_cfg", None)
     if cfg is not None and cfg.interpret == itp:
         return cfg
-    with obs.span("kernel.occ_sweep", cat="kernel"):
-        cfg = sweep_occ_configs(idx, itp)
-    idx._pallas_occ_cfg = cfg
+    with _ATTACH_LOCK:
+        cfg = getattr(idx, "_pallas_occ_cfg", None)
+        if cfg is not None and cfg.interpret == itp:
+            return cfg
+        with obs.span("kernel.occ_sweep", cat="kernel"):
+            cfg = sweep_occ_configs(idx, itp)
+        idx._pallas_occ_cfg = cfg
     return cfg
 
 

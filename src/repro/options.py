@@ -16,6 +16,7 @@ bwa-mem's command-line flags onto fields via ``from_flags``:
     -O gap open (del,ins)  -E gap extend (del,ins)
     -L clip penalty (5',3')  -d Z-drop            -T min output score
     -U unpaired penalty    -R read group header line
+    -a output all hits     -Y soft-clip supplementary
 
 Fields that bwa keys by one flag but we store split (``-O`` ->
 ``o_del``/``o_ins``) accept bwa's ``INT[,INT]`` syntax.
@@ -68,6 +69,8 @@ class AlignOptions:
 
     # --- emission ---
     min_score: int = 30             # -T (SE regions AND rescue acceptance)
+    all_hits: bool = False          # -a: also emit secondary (0x100) records
+    softclip_supp: bool = False     # -Y: soft-clip supplementary records
     read_group: str | None = None   # -R '@RG\tID:...' (None: no RG)
 
     # --- paired-end (PEOptions) ---
@@ -120,6 +123,8 @@ class AlignOptions:
                                bsw_block=self.bsw_block,
                                bsw_sort=self.bsw_sort,
                                min_score=self.min_score,
+                               all_hits=self.all_hits,
+                               softclip_supp=self.softclip_supp,
                                kernel_interpret=self.kernel_interpret)
 
     def pe_options(self) -> PEOptions:
@@ -180,6 +185,8 @@ BWA_FLAGS: dict = {
     "-T": ("min_score", int),
     "-U": ("pen_unpaired", int),
     "-R": ("read_group", str),
+    "-a": ("all_hits", bool),
+    "-Y": ("softclip_supp", bool),
 }
 
 

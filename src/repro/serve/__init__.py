@@ -1,0 +1,32 @@
+"""Always-on alignment service: persistent server + continuous batching.
+
+The paper's kernels win by staying saturated with large batches; service
+traffic arrives as many small requests.  This package bridges the two:
+
+* ``server.AlignmentServer`` — loads the FM-index once, coalesces queued
+  requests of one option-cohort into full-width padded engine batches,
+  and streams each request's SAM records back byte-identical to an
+  offline ``Aligner.stream_sam`` run (the conformance contract).
+* ``client.ServeClient`` — thin blocking client over the wire protocol.
+* ``protocol`` — length-prefixed JSON frames + structured error codes.
+* ``batcher`` — the bounded request queue and cohort coalescing rules.
+
+Front-end: ``python -m repro.cli serve ref.fa [--port P] [...]``; load
+benchmark: ``benchmarks/bench_serve.py``.
+"""
+
+from .batcher import Overloaded, QueueClosed, Request, RequestQueue
+from .client import ServeClient, ServeError, ServeResult
+from .protocol import (ERR_BAD_REQUEST, ERR_DEADLINE, ERR_INTERNAL,
+                       ERR_OVERLOADED, ERR_READ_TOO_LONG, ERR_SHUTDOWN,
+                       MAX_FRAME, ProtocolError, recv_frame, send_frame)
+from .server import MAX_READ_LEN, AlignmentServer
+
+__all__ = [
+    "AlignmentServer", "MAX_READ_LEN",
+    "ServeClient", "ServeError", "ServeResult",
+    "Request", "RequestQueue", "Overloaded", "QueueClosed",
+    "ProtocolError", "send_frame", "recv_frame", "MAX_FRAME",
+    "ERR_BAD_REQUEST", "ERR_READ_TOO_LONG", "ERR_OVERLOADED",
+    "ERR_DEADLINE", "ERR_SHUTDOWN", "ERR_INTERNAL",
+]

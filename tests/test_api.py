@@ -168,6 +168,8 @@ FLAG_CASES = [
     ("-T", 40, {"min_score": 40}),
     ("-U", 9, {"pen_unpaired": 9}),
     ("-R", "@RG\tID:x", {"read_group": "@RG\tID:x"}),
+    ("-a", True, {"all_hits": True}),
+    ("-Y", True, {"softclip_supp": True}),
 ]
 
 
@@ -226,6 +228,109 @@ def test_options_frozen_and_replace():
     with pytest.raises(dataclasses.FrozenInstanceError):
         opt.min_seed_len = 1
     assert opt.replace(engine="baseline").engine == "baseline"
+
+
+# ---------------------------------------------------------------------
+# Satellite: -a (all hits) and -Y (soft-clip supplementary)
+# ---------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ay_world():
+    """Reference with an exact 3kb duplication (-> secondary hits) plus
+    a chimeric read stitched from two distant loci (-> supplementary)."""
+    rng = np.random.default_rng(17)
+    core = rng.integers(0, 4, 3000).astype(np.uint8)
+    filler = rng.integers(0, 4, 6000).astype(np.uint8)
+    ref = np.concatenate([core, filler, core])
+    idx = fmx.build_index(ref)
+    dup_read = ref[100:201].copy()            # inside the duplicated core
+    chimera = np.concatenate([ref[3200:3280], ref[7000:7101]])
+    reads = np.stack([np.pad(dup_read, (0, len(chimera) - len(dup_read)),
+                             constant_values=4), chimera])
+    lens = np.array([len(dup_read), len(chimera)], np.int64)
+    return idx, reads, lens
+
+
+def _flags(line: str) -> int:
+    return int(line.split("\t")[1])
+
+
+def _cigar(line: str) -> str:
+    return line.split("\t")[5]
+
+
+def test_default_drops_secondaries_marks_supplementary(ay_world):
+    """bwa defaults: no 0x100 records; the chimera's second locus is a
+    hard-clipped 0x800 supplementary record."""
+    idx, reads, lens = ay_world
+    res = Aligner.from_index(idx).align(reads, lens=lens)
+    lines = res.sam()
+    assert all(not _flags(ln) & 0x100 for ln in lines)
+    dup = [ln for ln in lines if ln.startswith("read0")]
+    assert len(dup) == 1                      # secondary hit suppressed
+    chim = [ln for ln in lines if ln.startswith("read1")]
+    assert len(chim) == 2                     # two primaries: split read
+    supp = [ln for ln in chim if _flags(ln) & 0x800]
+    assert len(supp) == 1
+    assert "H" in _cigar(supp[0]) and "S" not in _cigar(supp[0])
+    prim = [ln for ln in chim if not _flags(ln) & 0x800][0]
+    assert "H" not in _cigar(prim)
+
+
+def test_all_hits_emits_secondaries_as_superset(ay_world):
+    """-a adds 0x100/MAPQ-0 records; primary lines are unchanged."""
+    idx, reads, lens = ay_world
+    default = Aligner.from_index(idx).align(reads, lens=lens).sam()
+    allhits = Aligner.from_index(
+        idx, AlignOptions.from_flags({"-a": True})).align(
+            reads, lens=lens).sam()
+    sec = [ln for ln in allhits if _flags(ln) & 0x100]
+    assert sec, "duplicated locus must produce a secondary hit"
+    assert all(int(ln.split("\t")[4]) == 0 for ln in sec)   # MAPQ 0
+    assert [ln for ln in allhits if not _flags(ln) & 0x100] == default
+
+
+def test_softclip_supp_uses_soft_clips(ay_world):
+    """-Y: same records/flags as default, but supplementary CIGARs use S
+    (and the flag composes with -a)."""
+    idx, reads, lens = ay_world
+    default = Aligner.from_index(idx).align(reads, lens=lens).sam()
+    soft = Aligner.from_index(
+        idx, AlignOptions.from_flags({"-Y": True})).align(
+            reads, lens=lens).sam()
+    assert len(soft) == len(default)
+    assert [ln.split("\t")[1] for ln in soft] == \
+        [ln.split("\t")[1] for ln in default]
+    assert all("H" not in _cigar(ln) for ln in soft)
+    supp = [ln for ln in soft if _flags(ln) & 0x800]
+    assert supp and all("S" in _cigar(ln) for ln in supp)
+    both = Aligner.from_index(
+        idx, AlignOptions.from_flags({"-a": True, "-Y": True})).align(
+            reads, lens=lens).sam()
+    assert all("H" not in _cigar(ln) for ln in both)
+    assert any(_flags(ln) & 0x100 for ln in both)
+
+
+def test_ay_engine_parity(ay_world):
+    """baseline and batched agree byte-for-byte under -a/-Y too."""
+    idx, reads, lens = ay_world
+    for flags in ({"-a": True}, {"-Y": True}, {"-a": True, "-Y": True}):
+        opt = AlignOptions.from_flags(flags)
+        base = Aligner.from_index(idx, opt.replace(engine="baseline"))
+        batc = Aligner.from_index(idx, opt.replace(engine="batched"))
+        assert base.align(reads, lens=lens).sam() == \
+            batc.align(reads, lens=lens).sam(), flags
+
+
+def test_pe_output_never_hard_clips(pe_world):
+    """PE pair emission keeps soft clips and never sets 0x800 — the -Y/-a
+    slice must not perturb paired output (pairing reads regs[0], which is
+    never supplementary)."""
+    idx, r1, r2 = pe_world
+    res = Aligner.from_index(idx).align_pairs(r1, r2)
+    for ln in res.sam():
+        assert not _flags(ln) & 0x800
+        assert "H" not in _cigar(ln)
 
 
 # ---------------------------------------------------------------------
